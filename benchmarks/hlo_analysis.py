@@ -1,0 +1,246 @@
+"""Optimized-HLO text analysis: per-program FLOPs, collective bytes and
+while-loop trip accounting.
+
+``compiled.cost_analysis()`` counts a scan body ONCE (probed), so folded
+(scan-over-layers) programs under-report by the trip count.  This module
+parses ``compiled.as_text()`` into computations, extracts
+
+* dot/convolution FLOPs (from output shape × contracted dims),
+* collective operand bytes (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute, counting ``-start`` once),
+* while trip counts (the integer bound in the condition computation),
+
+and folds costs up the call graph with trip multiplication — giving the
+true per-step totals the roofline needs.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALL1_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_CALLN_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(stype: str) -> int:
+    """bytes of 'bf16[2,3]{1,0}' or a tuple '(bf16[..], f32[..])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(stype):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(stype: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(stype)
+    if not m or m.group(1) not in DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.shapes: Dict[str, str] = {}      # instr name -> type string
+        self.flops = 0.0
+        self.coll: Dict[str, float] = {}      # collective kind -> bytes
+        self.calls: List[Tuple[str, str]] = []  # (kind, computation)
+        self.whiles: List[Tuple[str, str]] = []  # (cond, body[, trip])
+        self.trip_const: Optional[int] = None  # if this is a condition comp
+        self.dot_bytes = 0.0                   # operand+output bytes of dots
+        self.convert_src: Dict[str, str] = {}  # convert instr -> source instr
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        s = line.strip()
+        if not s:
+            continue
+        if s.startswith("HloModule"):
+            continue
+        # computation header: `%name (params...) -> type {` or `ENTRY ...`
+        if s.endswith("{") and ("(" in s) and ("=" not in s.split("(")[0]):
+            header = s.split("(")[0].strip()
+            name = header.replace("ENTRY", "").strip().lstrip("%")
+            cur = Computation(name)
+            comps[name] = cur
+            if "ENTRY" in s:
+                entry = name
+            continue
+        if s == "}" or s.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(s)
+        if not m:
+            continue
+        iname, rest = m.group(1), m.group(2)
+        if rest.startswith("("):               # tuple-typed output
+            depth = 0
+            for i, ch in enumerate(rest):
+                depth += (ch == "(") - (ch == ")")
+                if depth == 0:
+                    break
+            stype = rest[: i + 1]
+        else:
+            stype = rest.split(" ", 1)[0]
+        cur.shapes[iname] = stype
+        body = rest[len(stype):]
+
+        opm = re.match(r"\s*([\w\-]+)\(", body)
+        op = opm.group(1) if opm else ""
+
+        if op == "parameter":
+            pass
+        if op == "constant" and "s32[]" in stype or (op == "constant" and
+                                                     "s64[]" in stype):
+            cm = re.search(r"constant\((\-?\d+)\)", body)
+            if cm:
+                v = int(cm.group(1))
+                if cur.trip_const is None or v > cur.trip_const:
+                    cur.trip_const = v
+        if op == "convert":
+            srcs = re.findall(r"%([\w.\-]+)", body.split(")", 1)[0])
+            if srcs:
+                cur.convert_src[iname] = srcs[0]
+        if op == "dot":
+            out = _shape_dims(stype)
+            ops_names = re.findall(r"%([\w.\-]+)", body.split(")", 1)[0])
+            lhs_t = cur.shapes.get(ops_names[0]) if ops_names else None
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", body)
+            if out and lhs_t and cm:
+                lhs = _shape_dims(lhs_t)
+                contract = 1
+                for d in cm.group(1).split(","):
+                    if d and lhs:
+                        contract *= lhs[1][int(d)]
+                n_out = 1
+                for d in out[1]:
+                    n_out *= d
+                cur.flops += 2.0 * n_out * contract
+                cur.dot_bytes += _shape_bytes(stype)
+                for on in ops_names[:2]:
+                    # the CPU backend legalizes bf16 dots by upconverting
+                    # operands to f32; charge the pre-convert (TPU-native)
+                    # width instead so HBM-byte accounting is target-true.
+                    b = _shape_bytes(cur.shapes.get(on, ""))
+                    src = cur.convert_src.get(on)
+                    if src is not None:
+                        sb = _shape_bytes(cur.shapes.get(src, ""))
+                        if 0 < sb < b:
+                            b = sb
+                    cur.dot_bytes += b
+        if op == "convolution":
+            out = _shape_dims(stype)
+            ops_names = re.findall(r"%([\w.\-]+)", body.split(")", 1)[0])
+            if out and len(ops_names) >= 2:
+                k_t = cur.shapes.get(ops_names[1])
+                k = _shape_dims(k_t) if k_t else None
+                if k:
+                    n_out = 1
+                    for d in out[1]:
+                        n_out *= d
+                    kelems = 1
+                    for d in k[1]:
+                        kelems *= d
+                    # flops ~= 2 * out_elems * (kernel elems / cout)
+                    cout = out[1][-1] if out[1] else 1
+                    cur.flops += 2.0 * n_out * max(kelems // max(cout, 1), 1)
+        for kind in COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                ops_names = re.findall(r"%([\w.\-]+)", body.split(")", 1)[0])
+                b = 0
+                for on in ops_names:
+                    b += _shape_bytes(cur.shapes.get(on, ""))
+                if b == 0:  # fall back to output size
+                    b = _shape_bytes(stype)
+                cur.coll[kind] = cur.coll.get(kind, 0.0) + b
+                break
+        if op == "while":
+            cm = re.search(r"condition=%?([\w.\-]+)", body)
+            bm = re.search(r"body=%?([\w.\-]+)", body)
+            tm = _TRIP_RE.search(body)
+            if cm and bm:
+                cur.whiles.append((cm.group(1), bm.group(1),
+                                   int(tm.group(1)) if tm else None))
+        else:
+            for cm in _CALL1_RE.finditer(body):
+                cur.calls.append((op, cm.group(1)))
+            for cm in _CALLN_RE.finditer(body):
+                for callee in re.split(r"[,\s%]+", cm.group(1)):
+                    if callee:
+                        cur.calls.append((op, callee))
+
+    comps["__entry__"] = comps.get(entry, Computation("none"))
+    return comps
+
+
+def aggregate(comps: Dict[str, Computation]) -> Dict[str, object]:
+    """Fold costs up the call graph from ENTRY, multiplying through whiles."""
+    memo: Dict[str, Tuple[float, Dict[str, float], float]] = {}
+    trips_seen: List[int] = []
+
+    def cost(name: str, depth=0) -> Tuple[float, Dict[str, float], float]:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 64:
+            return 0.0, {}, 0.0
+        memo[name] = (0.0, {}, 0.0)            # cycle guard
+        fl = c.flops
+        co = dict(c.coll)
+        db = c.dot_bytes
+        for _, callee in c.calls:
+            if callee in comps and callee != name:
+                f2, c2, d2 = cost(callee, depth + 1)
+                fl += f2
+                db += d2
+                for k, v in c2.items():
+                    co[k] = co.get(k, 0.0) + v
+        for cond, body, bc_trip in c.whiles:
+            trip = bc_trip
+            if trip is None:
+                trip = comps.get(cond).trip_const if comps.get(cond) else None
+            trip = trip if (trip and 0 < trip < 10 ** 7) else 1
+            trips_seen.append(trip)
+            f2, c2, d2 = cost(body, depth + 1)
+            fc, cc, dc = cost(cond, depth + 1)
+            fl += f2 * trip + fc * trip
+            db += d2 * trip + dc * trip
+            for k, v in c2.items():
+                co[k] = co.get(k, 0.0) + v * trip
+            for k, v in cc.items():
+                co[k] = co.get(k, 0.0) + v * trip
+        memo[name] = (fl, co, db)
+        return memo[name]
+
+    fl, co, db = cost("__entry__")
+    return {"flops_hlo": fl, "collectives": co,
+            "collective_bytes": sum(co.values()),
+            "dot_bytes": db, "while_trips": trips_seen}
+
+
+def analyze_hlo(text: str) -> Dict[str, object]:
+    return aggregate(parse_hlo(text))

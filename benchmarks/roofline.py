@@ -1,0 +1,97 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh)
+from the dry-run's compiled artifacts.
+
+  compute term    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips × 819 GB/s HBM)
+  collective term = collective_bytes / (chips × 50 GB/s/link ICI)
+
+HLO_FLOPs / collective_bytes come from the optimized-HLO parser with
+while-trip multiplication (``cost_analysis`` counts scan bodies once —
+probed).  The parser's numbers are *per device* (the SPMD module), so the
+terms drop the ``chips ×`` denominator.  HLO_bytes uses the trip-corrected
+dot operand/result bytes as the HBM-traffic proxy (matmul-dominated
+programs), with the analytic kernel-path estimate as cross-check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def terms(cell: Dict) -> Dict:
+    n_dev = 1
+    for d in cell["mesh"]:
+        n_dev *= d
+    fl = cell["hlo"]["flops_hlo"]               # per device
+    cb = cell["hlo"]["collective_bytes"]        # per device
+    mb = cell["hlo"]["dot_bytes"]               # per device (proxy)
+    t_c = fl / PEAK_FLOPS
+    t_m = mb / HBM_BW
+    t_x = cb / ICI_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    mf = cell.get("model_flops", 0.0)
+    useful = mf / (fl * n_dev) if fl else 0.0
+    # roofline fraction: useful model FLOPs over the time the dominant term
+    # implies at peak
+    step_t = max(t_c, t_m, t_x)
+    frac = (mf / n_dev / PEAK_FLOPS) / step_t if step_t else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "pods": 2 if cell.get("multi_pod") else 1,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dominant[1],
+        "model_flops_ratio": useful,
+        "roofline_frac": frac,
+        "mem_per_dev_gib": cell["memory"]["per_device_bytes"] / 2 ** 30,
+        "fits": cell["memory"]["fits_16g"],
+        "compile_s": cell.get("compile_s"),
+    }
+
+
+def build_table(results: List[Dict], pods: int = 1) -> List[Dict]:
+    out = []
+    for c in results:
+        if "error" in c or "skipped" in c:
+            continue
+        if (2 if c.get("multi_pod") else 1) != pods:
+            continue
+        out.append(terms(c))
+    return out
+
+
+def render(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s} "
+           f"{'roofline':>9s} {'mem GiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} {r['model_flops_ratio']:7.2f} "
+            f"{r['roofline_frac']:9.3f} {r['mem_per_dev_gib']:8.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun_baseline.json")
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    with open(args.results) as f:
+        results = json.load(f)
+    rows = build_table(results, pods=args.pods)
+    print(render(rows))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

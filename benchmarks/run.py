@@ -1,0 +1,51 @@
+"""Benchmark harness — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows; the roofline table (from the
+dry-run JSON, if present) is appended.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import paper_tables as T
+
+    print("name,us_per_call,derived")
+    for name, params, mode, folded, tile in T.table2_resources():
+        print(f"table2/{name},0,params={params};mode={mode};"
+              f"folded_layers={folded};tile={tile}")
+    for name, mode, passes in T.table3_passes():
+        on = "+".join(k for k, v in passes.items() if v)
+        print(f"table3/{name},0,mode={mode};passes={on}")
+    for name, t_base, t_opt, fps_b, fps_o, speed in T.table4_base_vs_opt():
+        print(f"table4/{name}/base,{t_base:.1f},fps={fps_b:.2f}")
+        print(f"table4/{name}/optimized,{t_opt:.1f},"
+              f"fps={fps_o:.2f};speedup={speed:.2f}x")
+    for name, t_flow, t_hand, speed in T.table5_comparison():
+        print(f"table5/{name}/flow,{t_flow:.1f},vs_handwritten={speed:.2f}x")
+        print(f"table5/{name}/handwritten_xla,{t_hand:.1f},")
+
+    res = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_baseline.json")
+    for cand in (os.path.join(os.path.dirname(__file__), "..", "results",
+                              "dryrun_optimized.json"), res):
+        if os.path.exists(cand):
+            from benchmarks.roofline import build_table
+            rows = build_table(json.load(open(cand)), pods=1)
+            for r in rows:
+                step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+                print(f"roofline/{r['arch']}/{r['shape']},{step * 1e6:.0f},"
+                      f"dominant={r['dominant']};"
+                      f"roofline_frac={r['roofline_frac']:.3f};"
+                      f"mem_gib={r['mem_per_dev_gib']:.2f}")
+            break
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""The paper's own networks through the flow: LeNet-5 (pipelined mode),
+MobileNetV1 and ResNet-34 (folded mode), base vs optimized configuration —
+the Table III/IV story at CPU-runnable scale.
+
+  PYTHONPATH=src python examples/paper_cnns.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+from repro.core import lowering
+from repro.core.plan import build_plan
+
+SERVE = ShapeConfig("serve", "prefill", 64, 8)
+
+
+def bench(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e3)
+
+
+def main():
+    for name, cfg, B in [("lenet5", get_config("lenet5"), 16),
+                         ("mobilenetv1", get_smoke("mobilenetv1"), 2),
+                         ("resnet34", get_smoke("resnet34"), 2)]:
+        rng = np.random.RandomState(0)
+        batch = {"images": jnp.asarray(
+            rng.randn(B, cfg.image_size, cfg.image_size, cfg.image_channels),
+            jnp.float32)}
+        rows = []
+        # precision held at fp32 for the CPU wall-time comparison (bf16 is
+        # emulated on the CPU backend; OF targets the TPU MXU)
+        for label, flow in [("base", FlowConfig().base()),
+                            ("optimized", FlowConfig(precision="fp32"))]:
+            plan = build_plan(cfg, flow, SERVE)
+            params = lowering.init_params(plan, jax.random.key(0))
+            apply = lowering.make_apply(plan)
+            f = jax.jit(lambda p, b: apply(p, b, mode="prefill")[0])
+            ms = bench(f, params, batch)
+            n_ops = sum(len(b.ops) for b in plan.graph.blocks)
+            rows.append((label, plan.stream.mode, flow.precision, n_ops, ms))
+        print(f"\n{name} (batch {B}, {cfg.image_size}px):")
+        for label, mode, prec, n_ops, ms in rows:
+            print(f"  {label:10s} mode={mode:9s} prec={prec} "
+                  f"micro-ops={n_ops:4d}  {ms:8.2f} ms  "
+                  f"({B / ms * 1e3:8.1f} fps)")
+        print(f"  speedup: {rows[0][-1] / rows[1][-1]:.2f}x "
+              f"(paper's FPGA gap: 9.4x-846x from generated-hardware "
+              f"quality; on CPU XLA fuses the base program too — the TPU "
+              f"gap lives in the kernel path, see EXPERIMENTS.md)")
+
+
+if __name__ == "__main__":
+    main()

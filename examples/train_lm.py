@@ -1,0 +1,60 @@
+"""End-to-end training driver: train a small LM for a few hundred steps with
+checkpointing and (optional) fault injection, on synthetic data with
+learnable structure.  The loss should drop well below the unigram entropy.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  PYTHONPATH=src python examples/train_lm.py --steps 100 --fail-at 40  # recovery demo
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+from repro.core.plan import build_plan
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim.adamw import AdamW
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--compress", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    shape = ShapeConfig("example", "train", args.seq, args.batch)
+    plan = build_plan(cfg, FlowConfig(mode="folded"), shape)
+    print(plan.describe())
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                                  global_batch=args.batch))
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    tr = Trainer(
+        plan,
+        AdamW(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+              compress="int8_ef" if args.compress else None),
+        TrainerConfig(steps=args.steps, ckpt_dir=ckpt_dir, ckpt_every=50,
+                      log_every=max(1, args.steps // 25),
+                      fail_at_step=args.fail_at))
+    _, _, hist = tr.fit(data, jax.random.key(0))
+    for s, l in hist:
+        print(f"step {s:5d}  loss {l:.4f}")
+    if args.fail_at is not None:
+        print(f"(recovered from the injected failure at step {args.fail_at}; "
+              f"restarts={tr._restarts})")
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_config(arch)`` / ``get_smoke(arch)`` and the
+40-cell (arch × shape) table with long-context applicability."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (  # noqa: F401
+    AttentionConfig, FlowConfig, ModelConfig, MoEConfig, RecurrenceConfig,
+    ShapeConfig, SHAPES,
+)
+
+_MODULES: Dict[str, str] = {
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen1.5-4b": "qwen15_4b",
+    "phi4-mini-3.8b": "phi4_mini_38b",
+    "stablelm-1.6b": "stablelm_16b",
+    "llama3.2-1b": "llama32_1b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "rwkv6-7b": "rwkv6_7b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "whisper-small": "whisper_small",
+    "lenet5": "lenet5",
+    "mobilenetv1": "mobilenetv1",
+    "resnet34": "resnet34",
+}
+
+ARCHS: List[str] = list(_MODULES)[:10]          # the ten assigned archs
+CNNS: List[str] = list(_MODULES)[10:]           # the paper's own networks
+
+# archs with sub-quadratic decode state: run long_500k; pure full-attention
+# archs skip it (see DESIGN.md §Arch-applicability).
+LONG_CONTEXT_OK = ("recurrentgemma-2b", "mixtral-8x7b", "rwkv6-7b")
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _mod(name).SMOKE
+
+
+def cells(include_skipped: bool = False) -> List[Tuple[str, str, bool]]:
+    """The 40 (arch, shape, runnable) cells of the assignment."""
+    out = []
+    for a in ARCHS:
+        for s in SHAPES:
+            runnable = not (s == "long_500k" and a not in LONG_CONTEXT_OK)
+            if runnable or include_skipped:
+                out.append((a, s, runnable))
+    return out

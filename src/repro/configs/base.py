@@ -1,0 +1,181 @@
+"""Configuration dataclasses for the repro compilation flow.
+
+A ``ModelConfig`` fully describes an architecture (the graph builder consumes
+it); a ``ShapeConfig`` describes one input-shape cell (train / prefill /
+decode / long-context-decode).  ``FlowConfig`` holds the knobs of the
+compilation flow itself (which passes run, execution mode, precision,
+distribution) — the analogue of the paper's optimization-application table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                  # per-expert FFN hidden size
+    num_shared: int = 0            # shared (always-on) experts
+    d_shared: Optional[int] = None # hidden size of shared experts (default d_expert)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    first_dense_layers: int = 0    # leading layers that use a dense FFN instead
+    first_dense_d_ff: int = 0      # hidden size of those dense FFNs
+
+    @property
+    def d_shared_eff(self) -> int:
+        return self.d_shared if self.d_shared is not None else self.d_expert
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: Optional[int] = None          # sliding-window size (None = full)
+    rope: Optional[str] = "default"       # None | default | partial
+    rope_base: float = 10000.0
+    rope_pct: float = 1.0                 # fraction of head_dim rotated
+    qkv_bias: bool = False
+    out_bias: bool = False
+    logits_softcap: Optional[float] = None
+
+
+@dataclass(frozen=True)
+class RecurrenceConfig:
+    """Config for linear-recurrence temporal mixing (RG-LRU / RWKV6)."""
+    kind: str                      # "rg_lru" | "rwkv6"
+    width: int                     # recurrence width (d for rg_lru)
+    n_heads: int = 0               # rwkv6 heads (width // head size)
+    head_dim: int = 64
+    conv_width: int = 4            # temporal conv in front of RG-LRU
+    lora_rank: int = 64            # rwkv6 data-dependent decay LoRA rank
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio | cnn
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attention: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    recurrence: Optional[RecurrenceConfig] = None
+    # layer pattern: e.g. ("rec", "rec", "attn") repeated for recurrentgemma.
+    # None => all layers identical ("attn" or "rec" depending on configs).
+    layer_pattern: Optional[Tuple[str, ...]] = None
+    ffn_kind: str = "swiglu"       # swiglu | geglu | gelu_mlp | rwkv_cm | moe
+    norm_kind: str = "rmsnorm"     # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # encoder-decoder (whisper):
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0           # frames produced by the (stubbed) frontend
+    cross_attention: bool = False
+    # multimodal stub (llava): number of prepended patch embeddings
+    n_patch_tokens: int = 0
+    d_vision: int = 1024           # vision-tower output dim (stub input)
+    vocab_pad_multiple: int = 32   # Megatron-style vocab padding for TP
+    max_seq_len: int = 1 << 20
+    # CNN-family fields (paper's own networks); vocab_size doubles as n_classes
+    image_size: int = 0
+    image_channels: int = 3
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab_size + m - 1) // m * m
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer temporal-mixing kind, length n_layers."""
+        if self.layer_pattern is None:
+            kind = "rec" if (self.recurrence and self.attention is None) else "attn"
+            return tuple([kind] * self.n_layers)
+        pat = self.layer_pattern
+        reps = (self.n_layers + len(pat) - 1) // len(pat)
+        return tuple((pat * reps)[: self.n_layers])
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6·N·D)."""
+        from repro.core.estimator import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.core.estimator import count_params
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Input-shape cells
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                      # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Flow (compilation) configuration — the paper's optimization knobs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FlowConfig:
+    # passes (paper Table I)
+    fuse_epilogues: bool = True        # LF
+    fold_layers: bool = True           # PK: scan over isomorphic groups
+    cached_writes: bool = True         # CW: VMEM accumulation in kernels
+    tile_select: bool = True           # LU/LT: BlockSpec tile selection
+    precision: str = "bf16"            # OF: "fp32" (base) | "bf16" (optimized)
+    streaming: bool = True             # CH/CE analogue: pipeline+overlap enabled
+    # execution mode: "auto" picks folded for deep nets, pipelined for small
+    mode: str = "auto"                 # auto | folded | pipelined
+    # distribution
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: Optional[str] = "model"
+    pp_axis: Optional[str] = None      # set to "pod" for cross-pod pipelining
+    microbatches: int = 1              # grad-accum / pipeline microbatches
+    # training
+    remat: str = "block"               # none | block | nested (two-level)
+    grad_compression: Optional[str] = None  # None | "int8_ef"
+    # kernels
+    kernel_backend: str = "reference"  # reference | pallas | pallas_interpret
+    vmem_budget_bytes: int = 96 * 1024 * 1024  # v5e ~128MiB VMEM, leave headroom
+    scan_unroll: int = 1
+
+    def base(self) -> "FlowConfig":
+        """The paper's *base* (unoptimized) configuration — every pass off."""
+        return dataclasses.replace(
+            self, fuse_epilogues=False, fold_layers=False, cached_writes=False,
+            tile_select=False, precision="fp32", streaming=False, mode="folded",
+            remat="none",
+        )
+
+
+def replace(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,34 @@
+"""Design-space explorer (the paper leaves DSE to future work — built here).
+
+The paper's factor selection ends with rule 3: *the design must not exceed
+device resources*, checked by hours of place & route.  Our "place & route"
+is ``.lower().compile()`` + ``memory_analysis()`` — seconds per candidate —
+so the DSE sweeps candidates compile-in-the-loop and picks the first
+configuration whose per-device footprint fits HBM:
+
+* training cells: microbatch count (gradient accumulation) ∈ {1, 2, 4, 8}
+  (halves activation transients per step; costs one extra round of FSDP
+  weight gathers per microbatch — the measured trade is logged).
+* (extensible: scan-unroll, sdpa chunk, CE chunk.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+HBM_BYTES = 16 * 1024 ** 3     # v5e
+
+
+def autotune_train_cell(arch: str, shape_name: str, mesh, base_flow,
+                        candidates: Tuple[int, ...] = (1, 2, 4, 8)):
+    """Returns (flow, result) for the first microbatch count that fits."""
+    from repro.launch.dryrun import run_cell
+    last = None
+    for mb in candidates:
+        flow = dataclasses.replace(base_flow, microbatches=mb)
+        r = run_cell(arch, shape_name, mesh=mesh, flow=flow)
+        r["autotuned_microbatches"] = mb
+        last = (flow, r)
+        if r["memory"]["per_device_bytes"] < HBM_BYTES:
+            return flow, r
+    return last

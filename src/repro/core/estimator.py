@@ -1,0 +1,106 @@
+"""Analytic cost model — the flow's resource estimator (paper §IV-J).
+
+On the FPGA, DSP usage was predicted by counting MACCs × unroll factors while
+logic/BRAM needed place-and-route.  Here the analytic layer predicts params,
+MODEL_FLOPS, per-op FLOPs/HBM-bytes (for tile selection and for the
+kernel-path roofline cross-check), while the "place-and-route" ground truth
+is the dry-run's ``compiled.cost_analysis()`` / ``memory_analysis()``.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@lru_cache(maxsize=64)
+def _graph_for(cfg: ModelConfig):
+    from repro.models.lm import build_graph
+    return build_graph(cfg)
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count from the graph (padded vocab included).  With
+    ``active_only`` routed-expert params are scaled by top_k / num_experts
+    (MoE active-parameter count for MODEL_FLOPS)."""
+    g = _graph_for(cfg)
+    total = 0
+    for b in g.blocks:
+        for spec in b.param_specs():
+            n = 1
+            for d in spec.shape:
+                n *= d
+            if active_only and spec.name.startswith("we_"):
+                n = n * cfg.moe.top_k // cfg.moe.num_experts
+            total += n
+    return total
+
+
+def non_embedding_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    g = _graph_for(cfg)
+    total = 0
+    for b in g.blocks:
+        if b.kind in ("embed", "dec_embed", "head"):
+            continue
+        for spec in b.param_specs():
+            n = 1
+            for d in spec.shape:
+                n *= d
+            if active_only and spec.name.startswith("we_"):
+                n = n * cfg.moe.top_k // cfg.moe.num_experts
+            total += n
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS per step: 6·N·D (train), 2·N·D (prefill forward),
+    2·N·B (decode, one token per sequence).  N = active params for MoE."""
+    n = count_params(cfg, active_only=cfg.moe is not None)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch
+
+
+def attention_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Quadratic attention term (excluded from 6·N·D), for the estimator's
+    FLOPs cross-check."""
+    a = cfg.attention
+    if a is None:
+        return 0.0
+    n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+    S = shape.seq_len
+    w = a.window or S
+    if shape.kind == "decode":
+        per = 2 * 2 * a.n_heads * a.head_dim * min(S, w)
+        return per * n_attn * shape.global_batch
+    # sum over query positions of visible window
+    kv_per_q = min(w, S) if not a.causal else min(w, S) / 2
+    per_tok = 2 * 2 * a.n_heads * a.head_dim * kv_per_q
+    mult = 3 if shape.kind == "train" else 1
+    return per_tok * S * shape.global_batch * n_attn * mult
+
+
+def hbm_bytes_kernel_path(cfg: ModelConfig, shape: ShapeConfig,
+                          dtype_bytes: int = 2) -> float:
+    """Analytic HBM traffic of the *kernel* path (fused epilogues, flash
+    attention: no S² intermediate, VMEM accumulation): params read once +
+    activations once per layer boundary + KV cache traffic."""
+    n = count_params(cfg, active_only=cfg.moe is not None)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    act = tokens * cfg.d_model * dtype_bytes
+    per_layer_acts = 4 * act                     # in/out of the two sub-blocks
+    total = n * dtype_bytes + cfg.n_layers * per_layer_acts
+    if shape.kind == "decode" and cfg.attention:
+        C = min(shape.seq_len, cfg.attention.window or shape.seq_len)
+        kv = (2 * C * cfg.attention.n_kv_heads * cfg.attention.head_dim *
+              dtype_bytes * shape.global_batch)
+        n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+        total += kv * n_attn
+    if shape.kind == "train":
+        total *= 3                               # fwd + bwd re-read/write
+    return total

@@ -1,0 +1,1 @@
+from repro.core.passes import caching, folding, fusion, precision, streaming, tiling  # noqa: F401

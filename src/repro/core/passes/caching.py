@@ -1,0 +1,24 @@
+"""CW — cached-writes pass (paper §IV-D).
+
+On the FPGA, accumulations were moved from DDR read-modify-write into local
+registers with a final copy-out stage.  On the TPU the kernel analogue is the
+fp32 VMEM scratch accumulator in the fused matmul/conv kernels: partial sums
+live in VMEM across the K grid dimension and HBM is written exactly once at
+the last K step.  This pass records that policy for the kernel layer and for
+the estimator's HBM-byte model; with ``cached_writes`` off the kernels use
+the naive read-modify-write schedule (one HBM round-trip per K step) — the
+paper's base behaviour.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CachingPlan:
+    vmem_accumulate: bool      # accumulate in VMEM scratch (True = CW on)
+    donate_state: bool = True  # donate KV/optimizer buffers (in-place update)
+
+
+def run(flow) -> CachingPlan:
+    return CachingPlan(vmem_accumulate=flow.cached_writes)

@@ -1,0 +1,28 @@
+"""OF — optimized float operations (paper §IV-I).
+
+``-fp-relaxed``/``-fpc`` let the AOC compiler reassociate float ops and fuse
+multiply-accumulates.  The TPU analogue: bf16 storage/compute feeding the MXU
+with fp32 accumulation (``preferred_element_type``), and bf16 parameters for
+serving.  The base configuration is straight fp32 — the unfused, unrelaxed
+float pipeline of the base kernels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class PrecisionPlan:
+    compute_dtype: object
+    param_dtype: object
+    accum_dtype: object = jnp.float32
+
+
+def run(flow, shape) -> PrecisionPlan:
+    if flow.precision == "bf16":
+        # serving keeps bf16 weights; training keeps fp32 masters, bf16 compute
+        pdt = jnp.bfloat16 if shape.kind != "train" else jnp.float32
+        return PrecisionPlan(jnp.bfloat16, pdt)
+    return PrecisionPlan(jnp.float32, jnp.float32)

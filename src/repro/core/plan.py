@@ -1,0 +1,66 @@
+"""ExecutionPlan — the product of the compilation flow's pass pipeline."""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
+from repro.core.graph import Graph
+from repro.core.passes import caching, folding, fusion, precision, streaming, tiling
+from repro.core.passes.folding import Unit
+
+
+@dataclass
+class ExecutionPlan:
+    cfg: ModelConfig
+    flow: FlowConfig
+    shape: ShapeConfig
+    graph: Graph                     # post-fusion graph
+    units: List[Unit]                # folding result (scan groups)
+    tiles: Dict[str, Any]
+    stream: streaming.StreamPlan
+    prec: precision.PrecisionPlan
+    cache: caching.CachingPlan
+    rules: Optional[Any] = None      # ShardingRules (distributed runtime)
+
+    @property
+    def cache_len(self) -> int:
+        """KV-cache length for serving: bounded by the attention window."""
+        w = self.cfg.attention.window if self.cfg.attention else None
+        c = self.shape.seq_len
+        if w:
+            c = min(c, w)
+        return c
+
+    def describe(self) -> str:
+        folded = [u for u in self.units if u.folded]
+        lines = [
+            f"plan[{self.cfg.name} x {self.shape.name}] mode={self.stream.mode}",
+            f"  passes: fuse={self.flow.fuse_epilogues} fold={self.flow.fold_layers}"
+            f" tiles={self.flow.tile_select} cw={self.flow.cached_writes}"
+            f" prec={self.flow.precision}",
+            f"  units: {len(self.units)} ({len(folded)} folded: " +
+            ", ".join(f"{u.reps}x{u.period}" for u in folded) + ")",
+            f"  tiles: {self.tiles}",
+        ]
+        return "\n".join(lines)
+
+
+def build_plan(cfg: ModelConfig, flow: FlowConfig, shape: ShapeConfig,
+               mesh_axes: Tuple[str, ...] = (), rules=None,
+               graph: Optional[Graph] = None) -> ExecutionPlan:
+    """Run the full pass pipeline: build graph -> LF fusion -> PK folding ->
+    LU/LT tiling -> OF precision -> CW caching -> CH/CE streaming."""
+    from repro.models.lm import build_graph
+    g = copy.deepcopy(graph) if graph is not None else build_graph(cfg)
+    if flow.fuse_epilogues:
+        g = fusion.run(g, fold_bn=shape.kind != "train")
+    stream = streaming.run(g, cfg, flow, mesh_axes)
+    fold_on = flow.fold_layers and stream.mode == "folded"
+    units = folding.run(g, enabled=fold_on)
+    tiles = tiling.run(cfg, shape, flow)
+    prec = precision.run(flow, shape)
+    cach = caching.run(flow)
+    return ExecutionPlan(cfg, flow, shape, g, units, tiles, stream, prec,
+                         cach, rules)

@@ -1,0 +1,192 @@
+"""Divisibility-aware sharding solver.
+
+Maps ParamSpec dimension *roles* onto mesh axes:
+
+* **tp ("model")** — d_ff (Megatron column/row FFN), vocab (embedding/head),
+  expert (EP, when num_experts divides the axis), heads (storage sharding of
+  attention projections; compute-level attention parallelism is context
+  parallelism over the sequence, which works for every head count).
+* **fsdp (dp axes)** — the largest remaining divisible dim (d_model first):
+  ZeRO-3-style parameter + optimizer-state sharding; XLA inserts the
+  all-gathers at use and reduce-scatters the gradients.
+
+Activations are constrained by role tuples at strategic points (attention
+entry/exit = context parallelism, MoE dispatch buffers, logits).  Every
+assignment checks divisibility — jit rejects uneven shards — and never uses
+a mesh axis twice in one spec.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.graph import ParamSpec
+
+# role -> priority order for the tp axis (first divisible wins).
+# "heads_in" is deliberately absent: the attention out-projection stays
+# row-local (its input is already sequence-sharded by context parallelism).
+TP_ROLES = ("expert", "d_ff", "vocab", "heads")
+# role -> priority for fsdp
+FSDP_ROLES = ("d_model", "heads", "heads_in", "d_ff", "vocab", "expert",
+              "layers")
+
+ACT_ROLE_AXES = {
+    "batch": "__dp__",
+    "seq_cp": "__tp__",      # context-parallel sequence sharding
+    "kv_len": "__tp__",      # decode: KV cache length over tp
+    "vocab": "__tp__",
+    "d_ff": "__tp__",
+    "expert": "__tp__",
+    "heads": "__tp__",
+    "gather": None,          # force replication (KV all-gather)
+    "none": None,
+    "seq": None,
+}
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    dp: Tuple[str, ...] = ("data",)
+    tp: Optional[str] = "model"
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp] if self.tp else 1
+
+    # -- parameters ---------------------------------------------------------
+    def param_pspec(self, spec: ParamSpec, shape: Tuple[int, ...],
+                    stacked: bool) -> P:
+        roles = (("layers",) + spec.roles) if stacked else spec.roles
+        assert len(roles) == len(shape), (spec.name, roles, shape)
+        entries: list = [None] * len(roles)
+        used_tp = self.tp is None
+        for want in TP_ROLES:
+            if used_tp:
+                break
+            for i, r in enumerate(roles):
+                if r == want and shape[i] % self.tp_size == 0:
+                    entries[i] = self.tp
+                    used_tp = True
+                    break
+        dp_ent = self.dp if len(self.dp) > 1 else self.dp[0]
+        for want in FSDP_ROLES:
+            done = False
+            for i, r in enumerate(roles):
+                if (r == want and entries[i] is None
+                        and shape[i] % self.dp_size == 0):
+                    entries[i] = dp_ent
+                    done = True
+                    break
+            if done:
+                break
+        return P(*entries)
+
+    def param_sharding(self, spec: ParamSpec, shape: Tuple[int, ...],
+                       stacked: bool) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_pspec(spec, shape, stacked))
+
+    def _axis_size(self, entry) -> int:
+        if entry is None:
+            return 1
+        if isinstance(entry, tuple):
+            n = 1
+            for a in entry:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[entry]
+
+    def _drop_undivisible(self, ps: P, shape: Tuple[int, ...]) -> P:
+        entries = []
+        for i, entry in enumerate(ps):
+            if entry is not None and shape[i] % self._axis_size(entry) != 0:
+                entry = None
+            entries.append(entry)
+        return P(*entries)
+
+    # -- activations --------------------------------------------------------
+    def act_pspec(self, roles: Tuple[str, ...],
+                  shape: Tuple[int, ...]) -> P:
+        entries = []
+        used = set()
+        for i, r in enumerate(roles):
+            ax = ACT_ROLE_AXES.get(r)
+            if ax == "__dp__":
+                ent = self.dp if len(self.dp) > 1 else self.dp[0]
+                flat = self.dp
+            elif ax == "__tp__":
+                ent = self.tp
+                flat = (self.tp,)
+            else:
+                ent = None
+                flat = ()
+            if ent is not None and (set(flat) & used
+                                    or shape[i] % self._axis_size(ent) != 0):
+                ent = None
+                flat = ()
+            used |= set(flat)
+            entries.append(ent)
+        return P(*entries)
+
+    def constrain_act(self, x, roles: Tuple[str, ...]):
+        if len(roles) != x.ndim:
+            roles = tuple(roles[: x.ndim]) + ("none",) * (x.ndim - len(roles))
+        ps = self.act_pspec(roles, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, ps))
+
+    # -- whole-tree helpers ---------------------------------------------------
+    def params_shardings(self, plan) -> Dict[str, Any]:
+        """Sharding tree matching the params pytree of ``plan``."""
+        from repro.core.lowering import param_specs_tree, param_shapes
+        specs = param_specs_tree(plan)
+        shapes = param_shapes(plan)
+        return jax.tree.map(
+            lambda sv, sh: self.param_sharding(sv[0], sh.shape, sv[1]),
+            specs, shapes, is_leaf=lambda v: isinstance(v, tuple)
+            and len(v) == 2 and isinstance(v[1], bool))
+
+    def batch_sharding(self, batch_shapes: Dict[str, Any]) -> Dict[str, Any]:
+        out = {}
+        for k, v in batch_shapes.items():
+            ent = self.dp if len(self.dp) > 1 else self.dp[0]
+            if v.shape[0] % self.dp_size != 0:
+                ent = None
+            out[k] = NamedSharding(self.mesh, P(ent))
+        return out
+
+    def state_sharding(self, state_tree) -> Any:
+        """KV caches: (…, C, KV, Dh) length over tp, batch over dp; recurrence
+        states: batch over dp.  Applied by leaf shape heuristics."""
+        def one(x):
+            shape = x.shape
+            ent_dp = self.dp if len(self.dp) > 1 else self.dp[0]
+            entries = [None] * len(shape)
+            # find batch dim: first dim divisible by dp (stacked states have
+            # a leading layers dim; batch is dim 0 or 1)
+            for i in range(min(2, len(shape))):
+                if shape[i] % self.dp_size == 0:
+                    entries[i] = ent_dp
+                    bdim = i
+                    break
+            else:
+                bdim = -1
+            if self.tp and len(shape) >= bdim + 2 and bdim >= 0:
+                # KV caches: (B, C, KV, Dh) / stacked (L, B, C, KV, Dh)
+                if len(shape) - bdim == 4 or (len(shape) - bdim == 2
+                                              and x.dtype == jax.numpy.int32):
+                    c = bdim + 1
+                    if shape[c] % self.tp_size == 0:
+                        entries[c] = self.tp
+            return NamedSharding(self.mesh, P(*entries))
+        return jax.tree.map(one, state_tree)

@@ -1,0 +1,102 @@
+"""Split-KV flash-decoding Pallas kernel.
+
+One query token attends over a long (rolling) KV cache.  The cache length is
+split into blocks along the grid's innermost axis; each block contributes to
+an online-softmax accumulator in VMEM scratch (the distributed form — shards
+of the cache on different chips — combines the same (m, l, acc) triples with
+a psum at the lowering layer).  Masking is position-based: cache slots hold
+absolute positions (-1 = empty), so full, rolling and sliding-window caches
+all use one kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, nk: int,
+            window: Optional[int], softcap: Optional[float], scale: float):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G, bk)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = pos_ref[0]                                    # (bk,)
+    qpos = qpos_ref[0, 0]
+    valid = (kpos >= 0) & (kpos <= qpos)
+    if window:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, :], s, NEG)
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0, 0].astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kb == nk - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, kc: jax.Array, vc: jax.Array,
+                     pos: jax.Array, qpos: jax.Array, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     block_k: int = 2048,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, 1, H, D); kc/vc: (B, C, KV, D); pos: (B, C) absolute positions
+    (-1 empty); qpos: (B, 1).  Returns (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    C, KV = kc.shape[1], kc.shape[2]
+    G = H // KV
+    bk = min(block_k, _rup(C, 128))
+    Cp = _rup(C, bk)
+    kt = jnp.pad(kc, ((0, 0), (0, Cp - C), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(vc, ((0, 0), (0, Cp - C), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    pp = jnp.pad(pos, ((0, 0), (0, Cp - C)), constant_values=-1)
+    qt = q.reshape(B, KV, G, D)                          # group per kv head
+    nk = Cp // bk
+    grid = (B, KV, nk)
+
+    kern = functools.partial(_kernel, nk=nk, window=window, softcap=softcap,
+                             scale=D ** -0.5)
+    out = pl.pallas_call(
+        kern, grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, kb: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, kb: (b, h, kb, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, kb: (b, h, kb, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, kb: (b, kb)),
+            pl.BlockSpec((1, 1), lambda b, h, kb: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, kb: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+        interpret=interpret)(qt, kt, vt, pp, qpos)
+    return out.reshape(B, 1, H, D)
+
+
+def _rup(n, m):
+    return (n + m - 1) // m * m

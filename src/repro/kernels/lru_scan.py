@@ -1,0 +1,63 @@
+"""Diagonal linear-recurrence scan Pallas kernel (RG-LRU temporal mixing).
+
+h_t = a_t ⊙ h_{t-1} + b_t over (B, S, W).  The FPGA analogue of this op is a
+deeply pipelined accumulator chain; on TPU the kernel keeps the running state
+in VMEM scratch and streams S sequentially while the width dimension rides
+the VPU lanes — grid (B, W/bw), one resident state vector per instance (the
+sequential axis never touches HBM between steps; the pure-XLA fallback is an
+associative scan with O(log S) round trips).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, h_ref, *, seq: int):
+    h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, _):
+        h = a_ref[0, t, :] * h_ref[0, :] + b_ref[0, t, :]
+        h_ref[0, :] = h
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, seq, step, 0)
+
+
+def lru_scan(a: jax.Array, b: jax.Array, *, block_w: int = 512,
+             interpret: bool = False) -> jax.Array:
+    """a, b: (B, S, W) -> h: (B, S, W) with h_0 = 0."""
+    B, S, W = a.shape
+    bw = min(block_w, _rup(W, 128))
+    Wp = _rup(W, bw)
+    ap = jnp.pad(a, ((0, 0), (0, 0), (0, Wp - W)))
+    bp = jnp.pad(b, ((0, 0), (0, 0), (0, Wp - W)))
+    kern = functools.partial(_kernel, seq=S)
+    out = pl.pallas_call(
+        kern, grid=(B, Wp // bw),
+        in_specs=[pl.BlockSpec((1, S, bw), lambda i, j: (i, 0, j)),
+                  pl.BlockSpec((1, S, bw), lambda i, j: (i, 0, j))],
+        out_specs=pl.BlockSpec((1, S, bw), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Wp), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret)(ap, bp)
+    return out[:, :, :W]
+
+
+def lru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    def comb(u, v):
+        (a1, b1), (a2, b2) = u, v
+        return a2 * a1, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(comb, (a.astype(jnp.float32),
+                                           b.astype(jnp.float32)), axis=1)
+    return h.astype(a.dtype)
+
+
+def _rup(n, m):
+    return (n + m - 1) // m * m

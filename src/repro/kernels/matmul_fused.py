@@ -1,0 +1,160 @@
+"""Fused tiled matmul Pallas kernel — the flow's workhorse (paper: conv/FC).
+
+Embodies four paper passes on TPU:
+* LU/LT — the (bm, bk, bn) BlockSpec tiling is the unroll/tile factor,
+  MXU-aligned (multiples of 128) and VMEM-bounded (tiling pass).
+* CW   — partial sums live in an fp32 VMEM scratch across the K grid axis;
+  HBM is written exactly once, at the last K step (``pl.when``).
+* LF   — the epilogue (bias / activation / GLU pair) is applied in VMEM
+  before the single write-back; no intermediate tensor ever reaches HBM.
+* OF   — bf16 operands feed the MXU with fp32 accumulation.
+
+The unoptimized variant (``cached_writes=False``) accumulates in the output
+dtype through the output block each K step — the paper's base kernel
+(read-modify-write accumulation) — used for the base/optimized comparison.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _epilogue(acc, acc2, bias_ref, act):
+    from repro.core.ops_impl import _act
+    if acc2 is not None:                      # GLU pair: act(x@w1) * (x@w2)
+        acc = _act(acc, act or "silu") * acc2
+        act = None
+    if bias_ref is not None:
+        acc = acc + bias_ref[...].astype(jnp.float32)
+    if act:
+        acc = _act(acc, act)
+    return acc
+
+
+def _kernel(x_ref, w_ref, *rest, acc_ref=None, acc2_ref=None, nk: int,
+            act: Optional[str], has_bias: bool, has_w2: bool,
+            vmem_accum: bool):
+    idx = 0
+    w2_ref = rest[idx] if has_w2 else None
+    idx += int(has_w2)
+    bias_ref = rest[idx] if has_bias else None
+    idx += int(has_bias)
+    o_ref = rest[idx]
+
+    k = pl.program_id(2)
+    part = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    part2 = (jnp.dot(x_ref[...], w2_ref[...],
+                     preferred_element_type=jnp.float32) if has_w2 else None)
+
+    if vmem_accum:
+        @pl.when(k == 0)
+        def _():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            if has_w2:
+                acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+        acc_ref[...] += part
+        if has_w2:
+            acc2_ref[...] += part2
+
+        @pl.when(k == nk - 1)
+        def _():
+            r = _epilogue(acc_ref[...],
+                          acc2_ref[...] if has_w2 else None, bias_ref, act)
+            o_ref[...] = r.astype(o_ref.dtype)
+    else:
+        # base behaviour: accumulate through the output block in out-dtype
+        # (one write-back per K step, precision lost to out-dtype).
+        @pl.when(k == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[...] += part.astype(o_ref.dtype)
+        @pl.when(k == nk - 1)
+        def _():
+            r = _epilogue(o_ref[...].astype(jnp.float32), None, bias_ref, act)
+            o_ref[...] = r.astype(o_ref.dtype)
+
+
+def matmul_fused(x: jax.Array, w: jax.Array, *, bias=None, w2=None,
+                 act: Optional[str] = None,
+                 tile: Tuple[int, int, int] = (256, 512, 256),
+                 out_dtype=None, vmem_accum: bool = True,
+                 interpret: bool = False) -> jax.Array:
+    """y = epilogue(x @ w [, x @ w2]) with (M,K)x(K,N); leading dims of x are
+    flattened into M.  Pads every dim to the tile grid and slices back."""
+    if vmem_accum and w2 is not None:
+        pass
+    assert not (w2 is not None and not vmem_accum), \
+        "base (non-CW) kernel does not support the GLU epilogue"
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, K)
+    bm, bk, bn = tile
+    bm = min(bm, _rup(M, 8))
+    bk = min(bk, _rup(K, 128))
+    bn = min(bn, _rup(N, 128))
+    Mp, Kp, Np = _rup(M, bm), _rup(K, bk), _rup(N, bn)
+    x2 = _pad2(x2, Mp, Kp)
+    wp = _pad2(w, Kp, Np)
+    w2p = _pad2(w2, Kp, Np) if w2 is not None else None
+    bp = (jnp.pad(bias, (0, Np - N))[None, :].astype(jnp.float32)
+          if bias is not None else None)
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))]
+    operands = [x2, wp]
+    if w2 is not None:
+        in_specs.append(pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)))
+        operands.append(w2p)
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(bp)
+
+    odt = out_dtype or x.dtype
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    if w2 is not None:
+        scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
+
+    kernel = functools.partial(
+        _kernel, nk=nk, act=act, has_bias=bias is not None,
+        has_w2=w2 is not None, vmem_accum=vmem_accum)
+    if vmem_accum:
+        def kbody(*refs):
+            n_in = len(operands)
+            sc = refs[n_in + 1:]
+            kernel(refs[0], refs[1], *refs[2:n_in + 1],
+                   acc_ref=sc[0], acc2_ref=sc[1] if w2 is not None else None)
+        y = pl.pallas_call(
+            kbody, grid=grid, in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), odt),
+            scratch_shapes=scratch, interpret=interpret)(*operands)
+    else:
+        def kbody(*refs):
+            n_in = len(operands)
+            kernel(refs[0], refs[1], *refs[2:n_in + 1])
+        y = pl.pallas_call(
+            kbody, grid=grid, in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), odt),
+            interpret=interpret)(*operands)
+    return y[:M, :N].reshape(*lead, N)
+
+
+def _rup(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def _pad2(a, r, c):
+    return jnp.pad(a.astype(a.dtype), ((0, r - a.shape[0]), (0, c - a.shape[1])))

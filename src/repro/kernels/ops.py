@@ -1,0 +1,46 @@
+"""Jit'd wrappers routing the op layer onto the Pallas kernels.
+
+``interpret=True`` executes kernel bodies on CPU for validation; on the TPU
+target ``interpret=False`` compiles through Mosaic.  Tile parameters come
+from the tiling pass (plan.tiles); ``None`` falls back to kernel defaults.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import matmul_fused as _mm
+from repro.kernels import attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import conv2d as _cv
+
+
+def matmul_fused(x, w, *, bias=None, w2=None, act=None, tile=None,
+                 out_dtype=None, vmem_accum=True, interpret=False):
+    return _mm.matmul_fused(
+        x, w, bias=bias, w2=w2, act=act,
+        tile=tile or (256, 512, 256), out_dtype=out_dtype,
+        vmem_accum=vmem_accum, interpret=interpret)
+
+
+def flash_attention(q, k, v, positions=None, *, causal=True, window=None,
+                    softcap=None, tile=None, q_offset=0, interpret=False):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        tile=tile or (256, 512), q_offset=q_offset, interpret=interpret)
+
+
+def decode_attention(q, kc, vc, pos, qpos, *, window=None, softcap=None,
+                     tile=None, interpret=False):
+    return _da.decode_attention(
+        q, kc, vc, pos, qpos, window=window, softcap=softcap,
+        block_k=tile or 2048, interpret=interpret)
+
+
+def conv2d_fused(x, w, *, stride=1, padding="SAME", bn=None, act=None,
+                 tile=None, interpret=False):
+    block_c = tile[1] if isinstance(tile, tuple) else (tile or 128)
+    return _cv.conv2d_fused(x, w, stride=stride, padding=padding, bn=bn,
+                            act=act, block_c=block_c, interpret=interpret)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(x, kind):
+    from repro.core.ops_impl import _act as a
+    return a(x, kind)
+
+
+def matmul_fused_ref(x, w, *, bias=None, w2=None, act=None, out_dtype=None):
+    y = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    if w2 is not None:
+        y2 = jnp.matmul(x.astype(jnp.float32), w2.astype(jnp.float32))
+        y = _act(y, act or "silu") * y2
+        act = None
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if act:
+        y = _act(y, act)
+    return y.astype(out_dtype or x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        q_offset=0):
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32) * D ** -0.5
+    qg = qf.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[1])[None, :]
+    valid = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        valid &= kpos <= qpos
+    if window:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, kc, vc, pos, qpos, *, window=None, softcap=None):
+    B, _, H, D = q.shape
+    KV = kc.shape[2]
+    G = H // KV
+    qg = q.astype(jnp.float32).reshape(B, KV, G, D) * D ** -0.5
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kc.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (pos >= 0) & (pos <= qpos)
+    if window:
+        valid &= pos > qpos - window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vc.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def conv2d_fused_ref(x, w, *, stride=1, padding="SAME", bn=None, act=None):
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (stride, stride),
+        padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bn is not None:
+        scale, bias, mean, var = [t.astype(jnp.float32) for t in bn]
+        y = (y - mean) * (jax.lax.rsqrt(var + 1e-5) * scale) + bias
+    if act:
+        y = _act(y, act)
+    return y.astype(x.dtype)

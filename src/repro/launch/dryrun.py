@@ -1,0 +1,232 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST be the first two lines, before ANY other import: jax locks the
+# device count on first init.  setdefault (not assignment) so tests that
+# import run_cell under their own smaller device count are not clobbered.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh with ShapeDtypeStruct stand-ins (no allocation), record
+memory_analysis / cost_analysis / the collective schedule, and emit the JSON
+the roofline analysis reads.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (SHAPES, cells, get_config)
+from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
+from repro.core import lowering
+from repro.core.plan import ExecutionPlan, build_plan
+from repro.distributed.sharding import ShardingRules
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamW
+from repro.train.trainer import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "cnn":
+        out = {"images": sds((B, cfg.image_size, cfg.image_size,
+                              cfg.image_channels), jnp.float32)}
+        if shape.kind == "train":
+            out["labels"] = sds((B,), jnp.int32)
+        return out
+    out = {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = sds((B, S), jnp.int32)
+    if shape.kind != "decode":
+        if cfg.n_patch_tokens:
+            out["patches"] = sds((B, cfg.n_patch_tokens, cfg.d_vision),
+                                 jnp.float32)
+        if cfg.n_encoder_layers:
+            out["frames"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                jnp.float32)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mesh=None, flow: Optional[FlowConfig] = None):
+    """Build (plan, rules, step_fn, abstract args, shardings) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    rules = ShardingRules(mesh, dp=dp, tp="model")
+    flow = flow or FlowConfig(mode="folded")
+    plan = build_plan(cfg, flow, shape, mesh_axes=tuple(mesh.axis_names),
+                      rules=rules)
+    pshapes = lowering.param_shapes(plan)
+    psh = rules.params_shardings(plan)
+    bspecs = input_specs(cfg, shape)
+    bsh = rules.batch_sharding(bspecs)
+
+    import jax.sharding as js
+    rep = js.NamedSharding(mesh, js.PartitionSpec())
+    B = shape.global_batch
+    logits_sh = js.NamedSharding(
+        mesh, rules.act_pspec(("batch", "none", "vocab"),
+                              (B, 1, cfg.padded_vocab)))
+    if shape.kind == "train":
+        opt = AdamW()
+        step = make_train_step(plan, opt, microbatches=flow.microbatches)
+        ostate_abs = jax.eval_shape(opt.init, pshapes)
+        from repro.optim.adamw import AdamWState
+        osh = AdamWState(rep, psh, psh, None)
+        args = (pshapes, ostate_abs, bspecs)
+        shardings = (psh, osh, bsh)
+        out_shardings = (psh, osh, None)      # metrics: unspecified
+        donate = (0, 1)
+        fn = step
+    elif shape.kind == "prefill":
+        apply = lowering.make_apply(plan)
+        ssh = lowering.state_shardings(plan, B, rules)
+        def fn(params, batch):
+            logits, state, _ = apply(params, batch, mode="prefill")
+            return logits, state
+        args = (pshapes, bspecs)
+        shardings = (psh, bsh)
+        out_shardings = (logits_sh, ssh)
+        donate = ()
+    else:  # decode
+        apply = lowering.make_apply(plan)
+        state_abs = lowering.init_state(plan, B, abstract=True)
+        ssh = lowering.state_shardings(plan, B, rules)
+        def fn(params, batch, state, idx):
+            logits, new_state, _ = apply(params, batch, state=state,
+                                         cache_index=idx, mode="decode")
+            return logits, new_state
+        args = (pshapes, bspecs, state_abs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        shardings = (psh, bsh, ssh, rep)
+        out_shardings = (logits_sh, ssh)      # matches input -> buffers alias
+        donate = (2,)
+    return plan, mesh, fn, args, shardings, out_shardings, donate
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mesh=None, flow: Optional[FlowConfig] = None,
+             want_hlo: bool = True) -> Dict[str, Any]:
+    from repro.core.ops_impl import set_cpu_safe_dots
+    set_cpu_safe_dots(False)     # compile-only: keep the TPU-faithful program
+    if mesh is not None:
+        multi_pod = "pod" in mesh.axis_names
+    t0 = time.time()
+    plan, mesh, fn, args, shardings, out_shardings, donate = build_cell(
+        arch, shape_name, multi_pod=multi_pod, mesh=mesh, flow=flow)
+    res: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": list(mesh.devices.shape),
+                           "multi_pod": multi_pod,
+                           "mode": plan.stream.mode,
+                           "folds": [[u.reps, u.period] for u in plan.units
+                                     if u.folded]}
+    with mesh:
+        jfn = jax.jit(fn, in_shardings=shardings,
+                      out_shardings=out_shardings, donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    mem = compiled.memory_analysis()
+    res["lower_s"] = round(t1 - t0, 2)
+    res["compile_s"] = round(t2 - t1, 2)
+    res["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "code_bytes": mem.generated_code_size_in_bytes,
+    }
+    per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes +
+               mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    res["memory"]["per_device_bytes"] = per_dev
+    res["memory"]["fits_16g"] = bool(per_dev < 16 * 1024 ** 3)
+    ca = compiled.cost_analysis() or {}
+    res["cost_analysis"] = {k: float(ca[k]) for k in
+                            ("flops", "bytes accessed") if k in ca}
+    if want_hlo:
+        from benchmarks.hlo_analysis import analyze_hlo
+        txt = compiled.as_text()
+        res["hlo"] = analyze_hlo(txt)
+        del txt
+    # analytic cross-check
+    from repro.core.estimator import model_flops, hbm_bytes_kernel_path
+    cfg = get_config(arch)
+    res["model_flops"] = model_flops(cfg, SHAPES[shape_name])
+    res["est_kernel_bytes"] = hbm_bytes_kernel_path(cfg, SHAPES[shape_name])
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--flow-mode", default="folded")
+    ap.add_argument("--autotune", action="store_true",
+                    help="DSE: pick train-cell microbatch counts so the "
+                         "per-device footprint fits HBM")
+    args = ap.parse_args()
+
+    results = []
+    todo = []
+    if args.all:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for a, s, runnable in cells(include_skipped=True):
+            for mp in meshes:
+                todo.append((a, s, runnable, mp))
+    else:
+        todo = [(args.arch, args.shape, True, args.multi_pod)]
+
+    mesh_cache = {}
+    for a, s, runnable, mp in todo:
+        if not runnable:
+            results.append({"arch": a, "shape": s, "multi_pod": mp,
+                            "skipped": "full-attention arch: long-context "
+                            "decode inapplicable (see DESIGN.md)"})
+            print(f"SKIP {a} x {s}")
+            continue
+        if mp not in mesh_cache:
+            mesh_cache[mp] = make_production_mesh(multi_pod=mp)
+        try:
+            base_flow = FlowConfig(mode=args.flow_mode)
+            if args.autotune and SHAPES[s].kind == "train":
+                from repro.core.dse import autotune_train_cell
+                _, r = autotune_train_cell(a, s, mesh_cache[mp], base_flow)
+            else:
+                r = run_cell(a, s, multi_pod=mp, mesh=mesh_cache[mp],
+                             flow=base_flow)
+            gb = r["memory"]["per_device_bytes"] / 2 ** 30
+            print(f"OK   {a} x {s} pods={1+mp} compile={r['compile_s']}s "
+                  f"mem/dev={gb:.2f}GiB flops={r['cost_analysis'].get('flops', 0):.3g}")
+        except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+            r = {"arch": a, "shape": s, "multi_pod": mp,
+                 "error": f"{type(e).__name__}: {e}"}
+            print(f"FAIL {a} x {s} pods={1+mp}: {type(e).__name__}: {str(e)[:200]}")
+        results.append(r)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

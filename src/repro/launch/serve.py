@@ -1,0 +1,65 @@
+"""Batched serving driver.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --batch 4 --prompt-len 32 --steps 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+from repro.core import lowering
+from repro.core.plan import build_plan
+from repro.serving.engine import Engine, EngineConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--on-device-loop", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeConfig("cli", "decode", args.prompt_len + args.steps,
+                        args.batch)
+    plan = build_plan(cfg, FlowConfig(mode="folded"), shape)
+    print(plan.describe())
+    params = lowering.init_params(plan, jax.random.key(0))
+    eng = Engine(plan, params, EngineConfig(temperature=args.temperature))
+
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.n_patch_tokens:
+        batch["patches"] = jnp.asarray(
+            rng.randn(args.batch, cfg.n_patch_tokens, cfg.d_vision),
+            jnp.float32)
+    if cfg.n_encoder_layers:
+        batch["frames"] = jnp.asarray(
+            rng.randn(args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+
+    t0 = time.time()
+    if args.on_device_loop:
+        toks = eng.generate_fori(batch, args.steps)
+    else:
+        toks, _ = eng.generate(batch, args.steps)
+    dt = time.time() - t0
+    tps = args.batch * args.steps / dt
+    print(f"generated {toks.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
+    print(np.asarray(toks)[:2])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.lm import build_graph  # noqa: F401

@@ -1,0 +1,103 @@
+"""Mesh-agnostic checkpointing with async save and elastic restore.
+
+Layout: one ``.npy`` per pytree leaf (path-encoded filename) plus
+``meta.json``.  Arrays are written as *global* logical arrays, so a restore
+may re-shard onto a different mesh (elastic scaling) — the restore path takes
+a sharding tree and ``device_put``s each leaf.  Saves go through a temp dir +
+atomic rename (a crash mid-save never corrupts the latest checkpoint), and
+can run on a background thread (async checkpointing).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_seg(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _seg(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree, wait: bool = True,
+         keep: int = 3) -> Optional[threading.Thread]:
+    """Write checkpoint for ``step``.  With wait=False, runs in background."""
+    flat = _flatten(tree)
+    # fetch to host while the caller's arrays are still alive
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def _write():
+        tmp = os.path.join(ckpt_dir, f".tmp_{step}")
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        names = {}
+        for i, (k, v) in enumerate(host.items()):
+            fn = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fn), v)
+            names[k] = fn
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "leaves": names}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    if wait:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None):
+    """Restore into the structure of ``like``; re-shard with ``shardings``
+    (a matching pytree of NamedSharding, or None for default placement) —
+    the elastic-scaling path: the saved mesh need not match."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    flat_like = _flatten(like)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for k, leaf in flat_like.items():
+        arr = np.load(os.path.join(d, meta["leaves"][k]))
+        arr = arr.astype(leaf.dtype)
+        if k in flat_sh:
+            out[k] = jax.device_put(arr, flat_sh[k])
+        else:
+            out[k] = jax.device_put(arr)
+    # unflatten back into the structure of `like`
+    treedef = jax.tree_util.tree_structure(like)
+    keys = list(_flatten(like).keys())
+    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys])

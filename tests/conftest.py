@@ -1,0 +1,53 @@
+import os
+import sys
+
+# NOTE: deliberately NO --xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device.  Multi-device tests run in
+# subprocesses with their own XLA_FLAGS (see test_distributed.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+
+SMOKE_SHAPE = ShapeConfig("smoke", "train", 16, 2)
+
+
+def smoke_batch(cfg, B=2, S=16, seed=0, with_labels=True):
+    rng = np.random.RandomState(seed)
+    if cfg.family == "cnn":
+        out = {"images": jnp.asarray(
+            rng.randn(B, cfg.image_size, cfg.image_size, cfg.image_channels),
+            jnp.float32)}
+        if with_labels:
+            out["labels"] = jnp.asarray(rng.randint(0, cfg.vocab_size, B),
+                                        jnp.int32)
+        return out
+    out = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)),
+                                 jnp.int32)}
+    if with_labels:
+        out["labels"] = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)),
+                                    jnp.int32)
+    if cfg.n_patch_tokens:
+        out["patches"] = jnp.asarray(
+            rng.randn(B, cfg.n_patch_tokens, cfg.d_vision), jnp.float32)
+    if cfg.n_encoder_layers:
+        out["frames"] = jnp.asarray(
+            rng.randn(B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+def relerr(a, b):
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    return float(jnp.max(jnp.abs(a - b))) / (float(jnp.max(jnp.abs(b))) + 1e-9)
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

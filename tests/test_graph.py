@@ -1,0 +1,84 @@
+"""Graph-IR unit tests: validation, signatures, iso-group/period detection."""
+import pytest
+
+from repro.core.graph import Block, Graph, ParamSpec, iso_groups
+from repro.configs import get_smoke, get_config, ARCHS
+from repro.models.lm import build_graph
+
+
+def _blk(tag, d=8):
+    b = Block(f"b_{tag}", "layer")
+    b.add("y", "matmul", "h",
+          params=[ParamSpec(f"w", (d, d), ("d_model", "d_model"))])
+    b.add("h", "add", "h", "y")
+    return b
+
+
+def test_validate_rejects_undefined_input():
+    b = Block("x", "layer")
+    b.add("h", "add", "h", "nope")
+    with pytest.raises(AssertionError):
+        Graph("g", [b]).validate()
+
+
+def test_validate_requires_h_output():
+    b = Block("x", "layer")
+    b.add("z", "identity", "h")
+    with pytest.raises(AssertionError):
+        Graph("g", [b]).validate()
+
+
+def test_signature_equal_for_isomorphic_blocks():
+    assert _blk("a").signature() == _blk("b").signature()
+
+
+def test_signature_differs_on_shape():
+    assert _blk("a", 8).signature() != _blk("b", 16).signature()
+
+
+def test_iso_groups_period1():
+    blocks = [_blk(i) for i in range(5)]
+    assert iso_groups(blocks) == [([0, 1, 2, 3, 4], 1)]
+
+
+def test_iso_groups_period3_with_tail():
+    """(A A B) x2 + (A A) — the RecurrentGemma pattern at small scale."""
+    def a(i):
+        return _blk(f"a{i}", 8)
+    def b(i):
+        return _blk(f"b{i}", 16)
+    blocks = [a(0), a(1), b(2), a(3), a(4), b(5), a(6), a(7)]
+    groups = iso_groups(blocks)
+    assert groups[0] == ([0, 1, 2, 3, 4, 5], 3)
+    # the tail is one run of period 1
+    assert groups[1] == ([6, 7], 1)
+
+
+def test_param_spec_role_check():
+    with pytest.raises(AssertionError):
+        ParamSpec("w", (4, 4), ("bogus_role", "d_model"))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_all_graphs_validate(arch):
+    g = build_graph(get_smoke(arch))
+    g.validate()
+
+
+def test_param_counts_match_published():
+    """The exact configs must land on the published parameter counts."""
+    from repro.core.estimator import count_params
+    expected = {  # billions, ±2% (vocab padding, stub frontends)
+        "llama3.2-1b": 1.24, "mixtral-8x7b": 46.7, "deepseek-moe-16b": 16.4,
+        "qwen1.5-4b": 3.95, "rwkv6-7b": 7.6,
+    }
+    for arch, want in expected.items():
+        got = count_params(get_config(arch)) / 1e9
+        assert abs(got - want) / want < 0.02, (arch, got, want)
+
+
+def test_moe_active_params():
+    from repro.core.estimator import count_params
+    cfg = get_config("mixtral-8x7b")
+    active = count_params(cfg, active_only=True) / 1e9
+    assert 12.0 < active < 13.5          # published: 12.9B

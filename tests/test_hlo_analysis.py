@@ -1,0 +1,56 @@
+"""HLO-parser unit tests: dot FLOPs, collective bytes, trip multiplication —
+against a real compiled module so the format stays honest."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.hlo_analysis import analyze_hlo, parse_hlo, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[4,8]{1,0}") == 64
+    assert _shape_bytes("f32[2,2]") == 16
+    assert _shape_bytes("(f32[2,2], bf16[4]{0})") == 16 + 8
+    assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1
+
+
+def test_scan_trip_multiplication():
+    """A scanned matmul must be counted trip_count times."""
+    L, M, K = 12, 32, 64
+
+    def f(h, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, h, ws)
+        return jnp.sum(c)
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((L, K, K), jnp.float32)).compile()
+    res = analyze_hlo(c.as_text())
+    expect = 2.0 * M * K * K * L
+    assert res["flops_hlo"] == pytest.approx(expect, rel=0.05), res
+    assert L in res["while_trips"]
+
+
+def test_unrolled_matches_scanned():
+    M, K, L = 16, 32, 4
+
+    def scanned(h, ws):
+        def body(c, w):
+            return c @ w, None
+        return jnp.sum(jax.lax.scan(body, h, ws)[0])
+
+    def unrolled(h, ws):
+        for i in range(L):
+            h = h @ ws[i]
+        return jnp.sum(h)
+
+    a1 = analyze_hlo(jax.jit(scanned).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((L, K, K), jnp.float32)).compile().as_text())
+    a2 = analyze_hlo(jax.jit(unrolled).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((L, K, K), jnp.float32)).compile().as_text())
+    assert a1["flops_hlo"] == pytest.approx(a2["flops_hlo"], rel=0.05)

@@ -1,0 +1,129 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from conftest import relerr
+
+R = np.random.RandomState(7)
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("shape", [(16, 64, 32), (100, 130, 70),
+                                   (256, 256, 256), (8, 512, 128)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_matmul_bias_act(shape, dt):
+    M, K, N = shape
+    x = jnp.asarray(R.randn(M, K), dt)
+    w = jnp.asarray(R.randn(K, N), dt)
+    b = jnp.asarray(R.randn(N), dt)
+    y = ops.matmul_fused(x, w, bias=b, act="gelu", tile=(32, 64, 32),
+                         interpret=True)
+    r = ref.matmul_fused_ref(x, w, bias=b, act="gelu")
+    assert relerr(y, r) < _tol(dt)
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_matmul_glu(dt):
+    x = jnp.asarray(R.randn(64, 96), dt)
+    w = jnp.asarray(R.randn(96, 48), dt)
+    w2 = jnp.asarray(R.randn(96, 48), dt)
+    y = ops.matmul_fused(x, w, w2=w2, act="silu", tile=(32, 32, 32),
+                         interpret=True)
+    r = ref.matmul_fused_ref(x, w, w2=w2, act="silu")
+    assert relerr(y, r) < _tol(dt)
+
+
+def test_matmul_base_no_cached_writes():
+    """CW off: accumulate through the output block — still correct (fp32)."""
+    x = jnp.asarray(R.randn(64, 256), jnp.float32)
+    w = jnp.asarray(R.randn(256, 64), jnp.float32)
+    y = ops.matmul_fused(x, w, tile=(32, 64, 32), vmem_accum=False,
+                         interpret=True)
+    assert relerr(y, ref.matmul_fused_ref(x, w)) < 1e-5
+
+
+def test_matmul_leading_dims():
+    x = jnp.asarray(R.randn(2, 10, 48), jnp.float32)
+    w = jnp.asarray(R.randn(48, 32), jnp.float32)
+    y = ops.matmul_fused(x, w, tile=(8, 16, 32), interpret=True)
+    assert y.shape == (2, 10, 32)
+    assert relerr(y, ref.matmul_fused_ref(x, w)) < 1e-5
+
+
+@pytest.mark.parametrize("spec", [
+    (2, 64, 64, 4, 4, 32, True, None, 0),
+    (1, 48, 48, 4, 2, 16, True, 16, 0),
+    (2, 32, 96, 6, 2, 32, True, None, 64),     # CP shard: q offset
+    (1, 100, 100, 2, 1, 64, False, None, 0),   # bidirectional, ragged len
+    (2, 128, 128, 8, 8, 64, True, 32, 0),
+])
+def test_flash_attention(spec):
+    B, Sq, Skv, H, KV, D, causal, win, off = spec
+    q = jnp.asarray(R.randn(B, Sq, H, D), jnp.float32)
+    k = jnp.asarray(R.randn(B, Skv, KV, D), jnp.float32)
+    v = jnp.asarray(R.randn(B, Skv, KV, D), jnp.float32)
+    y = ops.flash_attention(q, k, v, causal=causal, window=win, q_offset=off,
+                            tile=(32, 32), interpret=True)
+    r = ref.flash_attention_ref(q, k, v, causal=causal, window=win,
+                                q_offset=off)
+    assert relerr(y, r) < 1e-5
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dt):
+    q = jnp.asarray(R.randn(2, 64, 4, 32), dt)
+    k = jnp.asarray(R.randn(2, 64, 2, 32), dt)
+    v = jnp.asarray(R.randn(2, 64, 2, 32), dt)
+    y = ops.flash_attention(q, k, v, tile=(32, 32), interpret=True)
+    assert relerr(y, ref.flash_attention_ref(q, k, v)) < _tol(dt)
+
+
+@pytest.mark.parametrize("spec", [(2, 64, 4, 2, 32, None),
+                                  (1, 96, 8, 1, 64, 32),
+                                  (3, 40, 4, 4, 16, None)])
+def test_decode_attention_rolling(spec):
+    B, C, H, KV, D, win = spec
+    fill = C // 2
+    kc = jnp.asarray(R.randn(B, C, KV, D), jnp.float32)
+    vc = jnp.asarray(R.randn(B, C, KV, D), jnp.float32)
+    pos = jnp.where(jnp.arange(C)[None] < fill, jnp.arange(C)[None], -1)
+    pos = jnp.broadcast_to(pos, (B, C)).astype(jnp.int32)
+    q = jnp.asarray(R.randn(B, 1, H, D), jnp.float32)
+    qpos = jnp.full((B, 1), fill, jnp.int32)
+    y = ops.decode_attention(q, kc, vc, pos, qpos, window=win, tile=32,
+                             interpret=True)
+    r = ref.decode_attention_ref(q, kc, vc, pos, qpos, window=win)
+    assert relerr(y, r) < 1e-5
+
+
+@pytest.mark.parametrize("spec", [(2, 16, 64), (1, 33, 130), (3, 8, 256)])
+def test_lru_scan(spec):
+    from repro.kernels.lru_scan import lru_scan, lru_scan_ref
+    B, S, W = spec
+    a = jnp.asarray(R.rand(B, S, W) * 0.9, jnp.float32)
+    b = jnp.asarray(R.randn(B, S, W), jnp.float32)
+    y = lru_scan(a, b, block_w=128, interpret=True)
+    assert relerr(y, lru_scan_ref(a, b)) < 1e-5
+
+
+@pytest.mark.parametrize("spec", [
+    (2, 16, 16, 3, 8, 3, 1, "SAME", True),
+    (1, 17, 17, 4, 16, 5, 2, "SAME", False),
+    (2, 12, 12, 8, 8, 1, 1, "VALID", True),    # the MobileNet 1x1 workhorse
+    (1, 16, 16, 3, 6, 3, 2, "VALID", False),
+])
+def test_conv2d(spec):
+    N, H, W, CI, CO, k, s, pad, bn = spec
+    x = jnp.asarray(R.randn(N, H, W, CI), jnp.float32)
+    w = jnp.asarray(R.randn(k, k, CI, CO), jnp.float32)
+    bnp = tuple(jnp.asarray(R.rand(CO) + 0.5, jnp.float32)
+                for _ in range(4)) if bn else None
+    y = ops.conv2d_fused(x, w, stride=s, padding=pad, bn=bnp, act="relu",
+                         interpret=True)
+    r = ref.conv2d_fused_ref(x, w, stride=s, padding=pad, bn=bnp, act="relu")
+    assert relerr(y, r) < 1e-5

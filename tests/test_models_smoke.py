@@ -1,0 +1,108 @@
+"""REQUIRED smoke tests: every assigned architecture instantiates a reduced
+config and runs one forward/train step on CPU, asserting output shapes and
+no NaNs — plus prefill→decode consistency per arch."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, CNNS, get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+from repro.core import lowering
+from repro.core.plan import build_plan
+
+from conftest import SMOKE_SHAPE, relerr, smoke_batch
+
+FLOW = FlowConfig(mode="folded")
+
+
+def _plan(arch, **kw):
+    return build_plan(get_smoke(arch), FlowConfig(mode="folded", **kw),
+                      SMOKE_SHAPE)
+
+
+@pytest.mark.parametrize("arch", ARCHS + CNNS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke(arch)
+    plan = _plan(arch)
+    params = lowering.init_params(plan, jax.random.key(0))
+    loss_fn = lowering.make_loss_fn(plan)
+    batch = smoke_batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch)
+    assert jnp.isfinite(loss), arch
+    gleaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in gleaves), arch
+    # shapes: grads match params
+    assert jax.tree.structure(grads) == jax.tree.structure(params)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes(arch):
+    cfg = get_smoke(arch)
+    plan = _plan(arch)
+    params = lowering.init_params(plan, jax.random.key(0))
+    apply = lowering.make_apply(plan)
+    B, S = 2, 16
+    batch = smoke_batch(cfg, B, S, with_labels=False)
+    logits, state, _ = apply(params, batch, mode="prefill")
+    assert logits.shape == (B, 1, cfg.padded_vocab)     # last-position logits
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Decode with cached state == full prefill of S+1 tokens (fp32)."""
+    import numpy as np
+    cfg = get_smoke(arch)
+    plan = build_plan(cfg, FlowConfig(mode="folded", precision="fp32"),
+                      SMOKE_SHAPE)
+    params = lowering.init_params(plan, jax.random.key(1))
+    apply = lowering.make_apply(plan)
+    B, S = 2, 12
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S + 1)), jnp.int32)
+    extras = smoke_batch(cfg, B, S, with_labels=False)
+    extras.pop("tokens")
+    lg_p, st, _ = apply(params, {"tokens": toks[:, :S], **extras},
+                        mode="prefill")
+    lg_d, _, _ = apply(params, {"tokens": toks[:, S:S + 1]}, state=st,
+                       cache_index=jnp.int32(S), mode="decode")
+    lg_ref, _, _ = apply(params, {"tokens": toks, **extras}, mode="prefill")
+    assert relerr(lg_d, lg_ref) < 2e-4, arch
+
+
+def test_multi_step_decode_rolling_window():
+    """Decode past the window: rolling cache must equal full recompute."""
+    import numpy as np
+    cfg = get_smoke("mixtral-8x7b")        # window = 16
+    plan = build_plan(cfg, FlowConfig(mode="folded", precision="fp32"),
+                      SMOKE_SHAPE)
+    params = lowering.init_params(plan, jax.random.key(2))
+    apply = lowering.make_apply(plan)
+    B, S, extra = 1, 12, 8                 # crosses the 16-token window
+    rng = np.random.RandomState(3)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S + extra)),
+                       jnp.int32)
+    _, st, _ = apply(params, {"tokens": toks[:, :S]}, mode="prefill")
+    for t in range(extra):
+        lg_d, st, _ = apply(params, {"tokens": toks[:, S + t:S + t + 1]},
+                            state=st, cache_index=jnp.int32(S + t),
+                            mode="decode")
+    lg_ref, _, _ = apply(params, {"tokens": toks}, mode="prefill")
+    assert relerr(lg_d, lg_ref) < 2e-4
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "rwkv6-7b"])
+def test_pallas_backend_matches_reference(arch):
+    cfg = get_smoke(arch)
+    batch = smoke_batch(cfg, with_labels=False)
+    p_ref = build_plan(cfg, FlowConfig(mode="folded", precision="fp32"),
+                       SMOKE_SHAPE)
+    p_pal = build_plan(cfg, FlowConfig(mode="folded", precision="fp32",
+                                       kernel_backend="pallas_interpret"),
+                       SMOKE_SHAPE)
+    params = lowering.init_params(p_ref, jax.random.key(0))
+    y1, _, _ = lowering.make_apply(p_ref)(params, batch, mode="prefill")
+    y2, _, _ = lowering.make_apply(p_pal)(params, batch, mode="prefill")
+    assert relerr(y1, y2) < 1e-5

@@ -1,0 +1,151 @@
+"""Optimization-pass tests: fusion rewrites, folding plans, tile rules."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import FlowConfig, SHAPES, ShapeConfig
+from repro.core import lowering
+from repro.core.graph import Block, Graph, ParamSpec as P
+from repro.core.passes import folding, fusion, tiling
+from repro.core.plan import build_plan
+
+from conftest import SMOKE_SHAPE, relerr, smoke_batch
+
+
+# ---------------------------------------------------------------------------
+# LF — fusion
+# ---------------------------------------------------------------------------
+
+def _ffn_block():
+    b = Block("l", "layer")
+    b.add("g", "matmul", "h", params=[P("w1", (8, 16), ("d_model", "d_ff"))])
+    b.add("ga", "act", "g", kind="silu")
+    b.add("u", "matmul", "h", params=[P("w3", (8, 16), ("d_model", "d_ff"))])
+    b.add("gu", "mul", "ga", "u")
+    b.add("fo", "matmul", "gu", params=[P("w2", (16, 8), ("d_ff", "d_model"))])
+    b.add("h", "add", "h", "fo")
+    return b
+
+
+def test_fusion_glu_and_residual():
+    g = Graph("g", [_ffn_block()])
+    fusion.run(g, fold_bn=True)
+    ops = g.blocks[0].ops
+    assert [o.op for o in ops] == ["glu_matmul", "matmul"]
+    assert ops[0].attrs["act"] == "silu"
+    assert ops[1].attrs.get("residual") is True
+    assert ops[1].out == "h"
+
+
+def test_fusion_bias_then_act():
+    b = Block("l", "layer")
+    b.add("y", "matmul", "h", params=[P("w", (8, 8), ("d_model", "d_model"))])
+    b.add("y", "bias_add", "y", params=[P("b", (8,), ("d_model",), "zeros")])
+    b.add("h", "act", "y", kind="gelu")
+    g = Graph("g", [b])
+    fusion.run(g, fold_bn=True)
+    (op,) = g.blocks[0].ops
+    assert op.op == "matmul" and op.attrs["bias"] and op.attrs["act"] == "gelu"
+    assert len(op.params) == 2
+
+
+def test_fusion_preserves_semantics():
+    """Fused vs unfused lowering of a whole smoke model must agree."""
+    cfg = get_smoke("llama3.2-1b")
+    batch = smoke_batch(cfg, with_labels=False)
+    f_on = build_plan(cfg, FlowConfig(fuse_epilogues=True, precision="fp32",
+                                      mode="folded"), SMOKE_SHAPE)
+    f_off = build_plan(cfg, FlowConfig(fuse_epilogues=False, precision="fp32",
+                                       mode="folded"), SMOKE_SHAPE)
+    params = lowering.init_params(f_on, jax.random.key(0))
+    y1, _, _ = lowering.make_apply(f_on)(params, batch, mode="prefill")
+    y2, _, _ = lowering.make_apply(f_off)(params, batch, mode="prefill")
+    assert relerr(y1, y2) < 1e-5
+
+
+def test_conv_bn_folding_inference_only():
+    cfg = get_smoke("mobilenetv1")
+    serve = build_plan(cfg, FlowConfig(), SHAPES["prefill_32k"])
+    train = build_plan(cfg, FlowConfig(), SHAPES["train_4k"])
+    has_bn_fused = any(op.attrs.get("bn") for b in serve.graph.blocks
+                       for op in b.ops)
+    train_bn_ops = any(op.op == "batchnorm" for b in train.graph.blocks
+                       for op in b.ops)
+    assert has_bn_fused and train_bn_ops
+
+
+# ---------------------------------------------------------------------------
+# PK — folding
+# ---------------------------------------------------------------------------
+
+def test_folding_full_configs():
+    plan = build_plan(get_config("qwen1.5-4b"), FlowConfig(),
+                      SHAPES["train_4k"])
+    folded = [u for u in plan.units if u.folded]
+    assert len(folded) == 1 and folded[0].reps == 40
+
+
+def test_folding_recurrentgemma_superblock():
+    plan = build_plan(get_config("recurrentgemma-2b"), FlowConfig(),
+                      SHAPES["train_4k"])
+    folded = [(u.reps, u.period) for u in plan.units if u.folded]
+    assert (8, 3) in folded            # 8 x (rec, rec, attn)
+    assert (2, 1) in folded            # the (rec, rec) tail
+
+
+def test_base_flow_disables_folding():
+    flow = FlowConfig().base()
+    plan = build_plan(get_smoke("llama3.2-1b"), flow, SMOKE_SHAPE)
+    assert not any(u.folded for u in plan.units)
+    assert plan.flow.precision == "fp32"
+
+
+def test_auto_mode_small_is_pipelined():
+    plan = build_plan(get_smoke("llama3.2-1b"), FlowConfig(mode="auto"),
+                      SMOKE_SHAPE)
+    assert plan.stream.mode == "pipelined"
+    assert not any(u.folded for u in plan.units)
+
+
+def test_folded_equals_pipelined():
+    """PK folding must not change the math — same params, same output."""
+    cfg = get_smoke("llama3.2-1b")
+    batch = smoke_batch(cfg, with_labels=False)
+    pf = build_plan(cfg, FlowConfig(mode="folded", precision="fp32"),
+                    SMOKE_SHAPE)
+    pp = build_plan(cfg, FlowConfig(mode="pipelined", precision="fp32"),
+                    SMOKE_SHAPE)
+    params_f = lowering.init_params(pf, jax.random.key(0))
+    params_p = lowering.init_params(pp, jax.random.key(0))
+    yf, _, _ = lowering.make_apply(pf)(params_f, batch, mode="prefill")
+    yp, _, _ = lowering.make_apply(pp)(params_p, batch, mode="prefill")
+    assert relerr(yf, yp) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# LU/LT — tiling
+# ---------------------------------------------------------------------------
+
+def test_tile_divides_and_fits():
+    for (m, k, n) in [(4096, 2048, 8192), (512, 14336, 4096),
+                      (8, 2048, 102400)]:
+        bm, bk, bn = tiling.select_matmul_tile(m, k, n, vmem=24 * 2 ** 20)
+        assert m % bm == 0 and k % bk == 0 and n % bn == 0
+        ws = (bm * bk + bk * bn) * 2 + bm * bn * 6
+        assert ws <= 24 * 2 ** 20
+        if n >= 128:
+            assert bn % 128 == 0
+
+
+def test_attention_tile_rules():
+    bq, bk = tiling.select_attention_tile(32768, 32768, 128,
+                                          vmem=24 * 2 ** 20)
+    assert 32768 % bq == 0 and 32768 % bk == 0
+    assert bq % 128 == 0 and bk % 128 == 0
+
+
+def test_base_tiles_are_minimal():
+    flow = FlowConfig().base()
+    t = tiling.run(get_config("llama3.2-1b"), SHAPES["train_4k"], flow)
+    assert t["matmul"] == (128, 128, 128)

@@ -1,0 +1,169 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.passes import tiling
+from repro.kernels import ops, ref
+from conftest import relerr
+
+SET = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# LU/LT invariants: the three factor rules of the paper (§IV-J)
+# ---------------------------------------------------------------------------
+
+@given(m=st.integers(8, 8192), k=st.integers(128, 16384),
+       n=st.integers(128, 16384), vmem=st.sampled_from(
+           [8 * 2 ** 20, 24 * 2 ** 20, 64 * 2 ** 20]))
+@settings(**SET)
+def test_matmul_tile_rules(m, k, n, vmem):
+    bm, bk, bn = tiling.select_matmul_tile(m, k, n, vmem=vmem)
+    # rule 2: even division — OR a 128-aligned tile (the kernel pads the
+    # problem to the tile grid; alignment beats divisibility on the MXU)
+    assert m % bm == 0 or bm % 128 == 0
+    assert k % bk == 0 or bk % 128 == 0
+    assert n % bn == 0 or bn % 128 == 0
+    # rule 3: fits the budget (unless the minimum tile itself exceeds it)
+    ws = (bm * bk + bk * bn) * 2 + bm * bn * 6
+    min_ws = (128 * 128 * 2) * 2 + 128 * 128 * 6
+    assert ws <= max(vmem, min_ws * 16)
+    # rule 1 (alignment): MXU-aligned when the dim allows it
+    if n % 128 == 0:
+        assert bn % 128 == 0
+
+
+@given(sq=st.integers(1, 512).map(lambda x: x * 128),
+       dh=st.sampled_from([64, 128, 256]))
+@settings(**SET)
+def test_attention_tile_rules(sq, dh):
+    bq, bk = tiling.select_attention_tile(sq, sq, dh, vmem=24 * 2 ** 20)
+    assert sq % bq == 0 and sq % bk == 0
+    ws = (bq + 2 * bk) * dh * 2 + bq * bk * 4 + bq * dh * 4
+    assert ws <= 24 * 2 ** 20 or (bq == 128 and bk == 128)
+
+
+# ---------------------------------------------------------------------------
+# Recurrence kernels: chunked == sequential oracle
+# ---------------------------------------------------------------------------
+
+@given(s=st.integers(2, 33), h=st.sampled_from([1, 2]),
+       dk=st.sampled_from([4, 8]), chunk=st.sampled_from([2, 4, 16]),
+       seed=st.integers(0, 10), parallel=st.booleans())
+@settings(**SET)
+def test_wkv_chunked_matches_sequential(s, h, dk, chunk, seed, parallel):
+    from repro.core.ops_impl import _wkv_chunked
+    rng = np.random.RandomState(seed)
+    B, dv = 2, dk
+    r = jnp.asarray(rng.randn(B, s, h, dk), jnp.float32) * 0.5
+    k = jnp.asarray(rng.randn(B, s, h, dk), jnp.float32) * 0.5
+    v = jnp.asarray(rng.randn(B, s, h, dv), jnp.float32) * 0.5
+    logw = -jnp.exp(jnp.asarray(rng.randn(B, s, h, dk), jnp.float32))
+    u = jnp.asarray(rng.randn(h, dk), jnp.float32)
+    y, fin = _wkv_chunked(r, k, v, logw, u, chunk, parallel=parallel)
+    # sequential oracle
+    S0 = jnp.zeros((B, h, dk, dv))
+    ys = []
+    for t in range(s):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], jnp.exp(logw[:, t])
+        bonus = jnp.einsum("bhk,bhk,bhv->bhv", rt, u * kt, vt)
+        ys.append(jnp.einsum("bhk,bhkv->bhv", rt, S0) + bonus)
+        S0 = wt[..., None] * S0 + kt[..., None] * vt[..., None, :]
+    yref = jnp.stack(ys, 1)
+    assert relerr(y, yref) < 1e-4
+    assert relerr(fin, S0) < 1e-4
+
+
+@given(s=st.integers(1, 24), w=st.sampled_from([4, 8]),
+       seed=st.integers(0, 5))
+@settings(**SET)
+def test_rglru_scan_matches_loop(s, w, seed):
+    """associative_scan recurrence == explicit python loop."""
+    rng = np.random.RandomState(seed)
+    a = jnp.asarray(rng.rand(2, s, w) * 0.9, jnp.float32)
+    b = jnp.asarray(rng.randn(2, s, w), jnp.float32)
+    def comb(u, v):
+        (a1, b1), (a2, b2) = u, v
+        return a2 * a1, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    ref_h = []
+    cur = jnp.zeros((2, w))
+    for t in range(s):
+        cur = a[:, t] * cur + b[:, t]
+        ref_h.append(cur)
+    assert relerr(h, jnp.stack(ref_h, 1)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants
+# ---------------------------------------------------------------------------
+
+@given(s=st.integers(2, 40), e=st.sampled_from([4, 8]),
+       k=st.sampled_from([1, 2]), seed=st.integers(0, 20))
+@settings(**SET)
+def test_moe_positions_unique_and_causal(s, e, k, seed):
+    """Per-(sequence, expert) slot positions are unique, dense from 0, and
+    appending a token never changes earlier positions (causality)."""
+    from repro.core import ops_impl
+    rng = np.random.RandomState(seed)
+    fe = jnp.asarray(rng.randint(0, e, (1, s * k)), jnp.int32)
+
+    def positions(row):
+        order = jnp.argsort(row, stable=True)
+        se = row[order]
+        starts = jnp.searchsorted(se, jnp.arange(e))
+        ps = jnp.arange(row.shape[0]) - starts[se]
+        return jnp.zeros_like(row).at[order].set(ps.astype(jnp.int32))
+
+    pos = positions(fe[0])
+    for ex in range(e):
+        mask = np.asarray(fe[0]) == ex
+        got = sorted(np.asarray(pos)[mask].tolist())
+        assert got == list(range(mask.sum()))
+        # token order preserved (causal cumsum semantics)
+        assert (np.diff(np.asarray(pos)[mask]) > 0).all()
+    # causality: prefix positions unchanged
+    if s > 3:
+        pos_prefix = positions(fe[0, : (s - 1) * k])
+        np.testing.assert_array_equal(np.asarray(pos)[: (s - 1) * k],
+                                      np.asarray(pos_prefix))
+
+
+# ---------------------------------------------------------------------------
+# Attention kernel: masking invariants under random windows/offsets
+# ---------------------------------------------------------------------------
+
+@given(sq=st.sampled_from([32, 64]), win=st.sampled_from([None, 8, 16]),
+       off=st.sampled_from([0, 32]), seed=st.integers(0, 10))
+@settings(max_examples=12, deadline=None)
+def test_flash_matches_ref_random(sq, win, off, seed):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(1, sq, 2, 16), jnp.float32)
+    kv = jnp.asarray(rng.randn(1, sq + off, 1, 16), jnp.float32)
+    y = ops.flash_attention(q, kv, kv, causal=True, window=win, q_offset=off,
+                            tile=(16, 16), interpret=True)
+    r = ref.flash_attention_ref(q, kv, kv, causal=True, window=win,
+                                q_offset=off)
+    assert relerr(y, r) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Optimizer: compression error feedback is lossless in expectation
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 20))
+@settings(**SET)
+def test_int8_error_feedback_accumulates(seed):
+    from repro.optim.adamw import AdamW
+    rng = np.random.RandomState(seed)
+    g = {"w": jnp.asarray(rng.randn(32, 32), jnp.float32)}
+    opt = AdamW(compress="int8_ef")
+    err = {"w": jnp.zeros((32, 32))}
+    total_deq = jnp.zeros((32, 32))
+    for _ in range(30):
+        deq, err = opt.compress_grads(g, err)
+        total_deq = total_deq + deq["w"]
+    # sum of dequantized grads + residual error == sum of true grads
+    assert relerr(total_deq + err["w"], 30.0 * g["w"]) < 1e-3
