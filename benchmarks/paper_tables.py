@@ -139,6 +139,45 @@ def _lenet_handwritten():
     return params, jax.jit(fwd)
 
 
+def table6_pass_stats() -> List[Tuple]:
+    """Per-pass pipeline stats per network (the PassManager's report —
+    the paper's per-optimization breakdown, §IV)."""
+    rows = []
+    for name in CNNS + ["llama3.2-1b"]:
+        cfg = get_config(name)
+        plan = build_plan(cfg, FlowConfig(mode="auto"), SERVE)
+        for pname, st in plan.pass_stats.items():
+            if not st.get("applied"):
+                rows.append((name, pname, "skipped"))
+                continue
+            compact = ";".join(f"{k}={v}" for k, v in st.items()
+                               if k not in ("applied", "tiles", "groups",
+                                            "epilogues"))
+            rows.append((name, pname, compact))
+    return rows
+
+
+def table7_tuned_vs_base() -> List[Tuple]:
+    """Explorer-tuned vs base flow, by the analytic cost model: predicted
+    step time and per-device footprint (the tuned-vs-base delta the paper's
+    Table IV measures end-to-end)."""
+    from repro.core import dse
+    from repro.core.estimator import estimate_footprint, estimate_step_seconds
+    rows = []
+    nets = [(n, get_config(n)) for n in CNNS] + \
+        [("llama3.2-1b-smoke", get_smoke("llama3.2-1b"))]
+    for name, cfg in nets:
+        base = FlowConfig().base()
+        fp_b = estimate_footprint(cfg, SERVE, base)
+        st_b = estimate_step_seconds(cfg, SERVE, base)
+        er = dse.explore(cfg, SERVE, FlowConfig(mode="folded"))
+        fp_t, st_t = er.best.footprint_bytes, er.best.step_s
+        rows.append((name, st_b["step_s"] * 1e6, st_t * 1e6,
+                     fp_b["total"], fp_t, st_b["step_s"] / max(st_t, 1e-12),
+                     er.best.knob_str()))
+    return rows
+
+
 def table5_comparison() -> List[Tuple]:
     """Our optimized flow vs a hand-written jnp/XLA implementation (the
     'TVM/TensorFlow CPU' stand-in)."""

@@ -48,7 +48,8 @@ def terms(cell: Dict) -> Dict:
         "model_flops_ratio": useful,
         "roofline_frac": frac,
         "mem_per_dev_gib": cell["memory"]["per_device_bytes"] / 2 ** 30,
-        "fits": cell["memory"]["fits_16g"],
+        "fits": cell["memory"].get("fits_budget",
+                                   cell["memory"].get("fits_16g")),
         "compile_s": cell.get("compile_s"),
     }
 

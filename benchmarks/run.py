@@ -30,6 +30,12 @@ def main() -> None:
     for name, t_flow, t_hand, speed in T.table5_comparison():
         print(f"table5/{name}/flow,{t_flow:.1f},vs_handwritten={speed:.2f}x")
         print(f"table5/{name}/handwritten_xla,{t_hand:.1f},")
+    for name, pname, compact in T.table6_pass_stats():
+        print(f"table6/{name}/{pname},0,{compact}")
+    for name, us_b, us_t, fp_b, fp_t, speed, knobs in T.table7_tuned_vs_base():
+        print(f"table7/{name}/base,{us_b:.1f},est_bytes={fp_b:.3g}")
+        print(f"table7/{name}/tuned,{us_t:.1f},est_bytes={fp_t:.3g};"
+              f"est_speedup={speed:.2f}x;knobs={knobs}")
 
     res = os.path.join(os.path.dirname(__file__), "..", "results",
                        "dryrun_baseline.json")

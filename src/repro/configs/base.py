@@ -145,6 +145,21 @@ SHAPES: dict[str, ShapeConfig] = {
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
+class TuningConfig:
+    """Design-space-explorer settings (paper §IV-J factor selection, grown
+    into the 'future work' DSE).  ``hbm_bytes`` is the paper's rule 3 — the
+    device resource budget a candidate must fit (v5e HBM by default, but a
+    first-class knob: other device generations/backends set it here)."""
+    hbm_bytes: int = 16 * 1024 ** 3        # per-device budget (v5e default)
+    vmem_candidates: Tuple[int, ...] = (96 * 2 ** 20, 48 * 2 ** 20)
+    microbatch_candidates: Tuple[int, ...] = (1, 2, 4, 8)
+    scan_unroll_candidates: Tuple[int, ...] = (1, 2, 4)
+    ce_chunk_candidates: Tuple[int, ...] = (128, 256, 512)
+    top_k: int = 3                         # candidates validated compile-in-loop
+    max_candidates: int = 8192             # enumeration safety cap
+
+
+@dataclass(frozen=True)
 class FlowConfig:
     # passes (paper Table I)
     fuse_epilogues: bool = True        # LF
@@ -167,6 +182,9 @@ class FlowConfig:
     kernel_backend: str = "reference"  # reference | pallas | pallas_interpret
     vmem_budget_bytes: int = 96 * 1024 * 1024  # v5e ~128MiB VMEM, leave headroom
     scan_unroll: int = 1
+    ce_chunk: int = 256                # sequence-chunked CE logits block
+    # design-space exploration (repro.core.dse)
+    tuning: TuningConfig = TuningConfig()
 
     def base(self) -> "FlowConfig":
         """The paper's *base* (unoptimized) configuration — every pass off."""

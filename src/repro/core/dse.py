@@ -1,34 +1,273 @@
-"""Design-space explorer (the paper leaves DSE to future work — built here).
+"""Estimator-guided design-space explorer (the paper leaves DSE to future
+work — built here).
 
-The paper's factor selection ends with rule 3: *the design must not exceed
-device resources*, checked by hours of place & route.  Our "place & route"
-is ``.lower().compile()`` + ``memory_analysis()`` — seconds per candidate —
-so the DSE sweeps candidates compile-in-the-loop and picks the first
-configuration whose per-device footprint fits HBM:
+The paper's §IV-J factor selection: count MACCs to predict DSP usage (cheap,
+analytic), then confirm the survivors with hours of place & route.  The same
+split, grown into a real explorer over the whole pass pipeline:
 
-* training cells: microbatch count (gradient accumulation) ∈ {1, 2, 4, 8}
-  (halves activation transients per step; costs one extra round of FSDP
-  weight gathers per microbatch — the measured trade is logged).
-* (extensible: scan-unroll, sdpa chunk, CE chunk.)
+1. **Space** — every pass in ``PassManager.default_pipeline()`` exposes its
+   tunable dimensions (fusion on/off, fold on/off, scan unroll, tile budget,
+   CE chunk, microbatches, remat mode, precision, cached writes).
+2. **Prune** — each candidate ``FlowConfig`` is scored with the analytic
+   cost model in :mod:`repro.core.estimator`: roofline step time (rule 1,
+   the bandwidth roof) and per-device HBM footprint vs the budget in
+   ``FlowConfig.tuning.hbm_bytes`` (rule 3).  Tiles honour rule 2 (even
+   division) by construction.
+3. **Validate** — the top-k survivors compile-in-the-loop: our "place &
+   route" is ``.lower().compile()`` + ``memory_analysis()`` — seconds per
+   candidate instead of hours.
+
+``explore()`` is deterministic: same (cfg, shape, base flow, devices) in,
+same chosen plan out.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import itertools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-HBM_BYTES = 16 * 1024 ** 3     # v5e
+from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig, TuningConfig
+from repro.core import estimator
 
+# default budget = TuningConfig's (v5e); override via FlowConfig.tuning
+HBM_BYTES = TuningConfig().hbm_bytes
+
+
+def per_device_bytes(mem) -> int:
+    """Per-device footprint from a compiled module's ``memory_analysis()`` —
+    the single definition the dry-run and the DSE validator both use."""
+    return (mem.argument_size_in_bytes + mem.output_size_in_bytes +
+            mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+
+
+# ---------------------------------------------------------------------------
+# candidates
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Candidate:
+    flow: FlowConfig
+    knobs: Tuple[Tuple[str, Any], ...]   # the tunables this candidate sets
+    footprint_bytes: float
+    step_s: float
+    bound: str                           # compute | memory
+    fits: bool                           # rule 3: footprint < budget
+
+    def knob_str(self) -> str:
+        return " ".join(f"{k}={v}" for k, v in self.knobs)
+
+
+@dataclass
+class ExploreResult:
+    best: Candidate
+    plan: Any                            # ExecutionPlan of the chosen flow
+    candidates: List[Candidate]          # estimator-ranked (pruned) list
+    n_enumerated: int
+    validated: List[Dict[str, Any]]      # compile-in-the-loop measurements
+    budget_bytes: int
+
+    def describe(self) -> str:
+        c = self.best
+        lines = [
+            f"dse[{self.plan.cfg.name} x {self.plan.shape.name}] "
+            f"enumerated={self.n_enumerated} pruned_to={len(self.candidates)} "
+            f"validated={len(self.validated)}",
+            f"  budget: {self.budget_bytes / 2 ** 30:.1f} GiB/device",
+            f"  best: {c.knob_str()}",
+            f"  est: footprint={c.footprint_bytes / 2 ** 30:.3f} GiB "
+            f"step={c.step_s * 1e3:.3f} ms ({c.bound}-bound) fits={c.fits}",
+        ]
+        for v in self.validated:
+            lines.append(
+                f"  measured[{v['knobs']}]: "
+                f"{v['per_device_bytes'] / 2 ** 30:.3f} GiB/device "
+                f"fits={v['fits']}")
+        return "\n".join(lines)
+
+
+def tunable_space(cfg: ModelConfig, flow: FlowConfig,
+                  shape: ShapeConfig) -> Dict[str, Tuple[Any, ...]]:
+    """The joint design space all passes expose for this cell."""
+    from repro.core.passmanager import PassManager
+    return PassManager.default_pipeline().tunable_space(cfg, flow, shape)
+
+
+def enumerate_candidates(cfg: ModelConfig, shape: ShapeConfig,
+                         base_flow: FlowConfig,
+                         space: Optional[Dict[str, Sequence[Any]]] = None,
+                         ) -> List[Tuple[FlowConfig, Tuple[Tuple[str, Any], ...]]]:
+    """Cartesian product of the tunable space applied over ``base_flow``,
+    in deterministic order (preferred/default value of each knob first)."""
+    space = space if space is not None else tunable_space(cfg, base_flow, shape)
+    keys = sorted(space)
+    out = []
+    cap = base_flow.tuning.max_candidates
+    for combo in itertools.islice(
+            itertools.product(*(space[k] for k in keys)), cap):
+        knobs = tuple(zip(keys, combo))
+        out.append((dataclasses.replace(base_flow, **dict(knobs)), knobs))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# compile-in-the-loop validation ("place & route" in seconds)
+# ---------------------------------------------------------------------------
+
+def abstract_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one cell's batch (no allocation)."""
+    import jax
+    import jax.numpy as jnp
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "cnn":
+        out = {"images": sds((B, cfg.image_size, cfg.image_size,
+                              cfg.image_channels), jnp.float32)}
+        if shape.kind == "train":
+            out["labels"] = sds((B,), jnp.int32)
+        return out
+    out = {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = sds((B, S), jnp.int32)
+    if shape.kind != "decode":
+        if cfg.n_patch_tokens:
+            out["patches"] = sds((B, cfg.n_patch_tokens, cfg.d_vision),
+                                 jnp.float32)
+        if cfg.n_encoder_layers:
+            out["frames"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                jnp.float32)
+    return out
+
+
+def compile_candidate(cfg: ModelConfig, shape: ShapeConfig,
+                      flow: FlowConfig) -> Dict[str, Any]:
+    """Lower + compile one candidate on the current backend (no mesh, no
+    allocation) and report its measured per-device footprint."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import lowering
+    from repro.core.plan import build_plan
+    plan = build_plan(cfg, flow, shape)
+    specs = abstract_inputs(cfg, shape)
+    if shape.kind == "train":
+        from repro.optim.adamw import AdamW
+        from repro.train.trainer import make_train_step
+        opt = AdamW()
+        step = make_train_step(plan, opt, microbatches=flow.microbatches)
+        pshapes = lowering.param_shapes(plan)
+        ostate = jax.eval_shape(opt.init, pshapes)
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+            pshapes, ostate, specs)
+    elif shape.kind == "decode":
+        apply = lowering.make_apply(plan)
+        pshapes = lowering.param_shapes(plan)
+        state = lowering.init_state(plan, shape.global_batch, abstract=True)
+        def fn(params, batch, state, idx):
+            logits, new_state, _ = apply(params, batch, state=state,
+                                         cache_index=idx, mode="decode")
+            return logits, new_state
+        lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+            pshapes, specs, state, jax.ShapeDtypeStruct((), jnp.int32))
+    else:
+        apply = lowering.make_apply(plan)
+        pshapes = lowering.param_shapes(plan)
+        fn = lambda p, b: apply(p, b, mode="prefill")[0]  # noqa: E731
+        lowered = jax.jit(fn).lower(pshapes, specs)
+    mem = lowered.compile().memory_analysis()
+    return {"per_device_bytes": per_device_bytes(mem),
+            "temp_bytes": mem.temp_size_in_bytes,
+            "argument_bytes": mem.argument_size_in_bytes}
+
+
+def compile_validator(cfg: ModelConfig,
+                      shape: ShapeConfig) -> Callable[[FlowConfig], Dict]:
+    """Validator for :func:`explore` backed by :func:`compile_candidate`."""
+    return lambda flow: compile_candidate(cfg, shape, flow)
+
+
+# ---------------------------------------------------------------------------
+# the explorer
+# ---------------------------------------------------------------------------
+
+def explore(cfg: ModelConfig, shape: ShapeConfig,
+            base_flow: Optional[FlowConfig] = None, *,
+            devices: int = 1,
+            validator: Optional[Callable[[FlowConfig], Dict]] = None,
+            space: Optional[Dict[str, Sequence[Any]]] = None,
+            top_k: Optional[int] = None) -> ExploreResult:
+    """Search the joint pass design space for the fastest candidate that
+    fits the device budget.
+
+    Estimator scoring prunes the full space; the top-k survivors are
+    validated compile-in-the-loop when a ``validator`` is given (see
+    :func:`compile_validator`; the multi-pod dry-run path passes a
+    ``run_cell``-backed one).  Without a validator the estimator ranking
+    decides alone.
+    """
+    flow0 = base_flow if base_flow is not None else FlowConfig(mode="folded")
+    tuning = flow0.tuning
+    budget = tuning.hbm_bytes
+    k = top_k if top_k is not None else tuning.top_k
+
+    enumerated = enumerate_candidates(cfg, shape, flow0, space=space)
+    cands: List[Candidate] = []
+    for flow, knobs in enumerated:
+        fp = estimator.estimate_footprint(cfg, shape, flow, devices)
+        st = estimator.estimate_step_seconds(cfg, shape, flow, devices)
+        cands.append(Candidate(flow, knobs, fp["total"], st["step_s"],
+                               st["bound"], fp["total"] < budget))
+    fitting = [c for c in cands if c.fits]
+    # stable sorts: enumeration order (defaults first) breaks ties.  When
+    # nothing fits analytically, footprint (closest to fitting) leads.
+    if fitting:
+        pool = sorted(fitting, key=lambda c: (c.step_s, c.footprint_bytes))
+    else:
+        pool = sorted(cands, key=lambda c: (c.footprint_bytes, c.step_s))
+    top = pool[:max(k, 1)]
+
+    validated: List[Dict[str, Any]] = []
+    best = top[0]
+    if validator is not None:
+        chosen = None
+        for c in top:
+            r = dict(validator(c.flow))
+            r["knobs"] = c.knob_str()
+            r["fits"] = bool(r["per_device_bytes"] < budget)
+            validated.append(r)
+            if r["fits"]:
+                chosen = c
+                break          # first fitting candidate wins; don't pay
+                               # further compiles for report decoration
+        best = chosen if chosen is not None else top[0]
+
+    from repro.core.plan import build_plan
+    plan = build_plan(cfg, best.flow, shape)
+    return ExploreResult(best=best, plan=plan, candidates=pool,
+                         n_enumerated=len(enumerated), validated=validated,
+                         budget_bytes=budget)
+
+
+# ---------------------------------------------------------------------------
+# mesh-level train-cell autotune (the original DSE entry point, kept for the
+# dry-run driver; now budget-aware via FlowConfig.tuning)
+# ---------------------------------------------------------------------------
 
 def autotune_train_cell(arch: str, shape_name: str, mesh, base_flow,
-                        candidates: Tuple[int, ...] = (1, 2, 4, 8)):
-    """Returns (flow, result) for the first microbatch count that fits."""
+                        candidates: Optional[Tuple[int, ...]] = None,
+                        hbm_bytes: Optional[int] = None):
+    """Returns (flow, result) for the first microbatch count whose measured
+    per-device footprint fits the configured HBM budget."""
     from repro.launch.dryrun import run_cell
+    budget = hbm_bytes if hbm_bytes is not None else base_flow.tuning.hbm_bytes
+    cands = candidates if candidates is not None else \
+        base_flow.tuning.microbatch_candidates
     last = None
-    for mb in candidates:
+    for mb in cands:
         flow = dataclasses.replace(base_flow, microbatches=mb)
         r = run_cell(arch, shape_name, mesh=mesh, flow=flow)
         r["autotuned_microbatches"] = mb
         last = (flow, r)
-        if r["memory"]["per_device_bytes"] < HBM_BYTES:
+        if r["memory"]["per_device_bytes"] < budget:
             return flow, r
     return last

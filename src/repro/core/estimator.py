@@ -11,7 +11,17 @@ from __future__ import annotations
 from functools import lru_cache
 from typing import Dict
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
+
+# Device presets for the DSE's roofline / budget rules.  The budget itself
+# (rule 3) comes from FlowConfig.tuning.hbm_bytes so non-v5e devices are a
+# config change, not a code change.
+DEVICE_PRESETS: Dict[str, Dict[str, float]] = {
+    "v5e": {"hbm_bytes": 16 * 1024 ** 3, "hbm_bw": 819e9,
+            "bf16_flops": 197e12},
+    "v5p": {"hbm_bytes": 95 * 1024 ** 3, "hbm_bw": 2765e9,
+            "bf16_flops": 459e12},
+}
 
 
 @lru_cache(maxsize=64)
@@ -104,3 +114,102 @@ def hbm_bytes_kernel_path(cfg: ModelConfig, shape: ShapeConfig,
     if shape.kind == "train":
         total *= 3                               # fwd + bwd re-read/write
     return total
+
+
+# ---------------------------------------------------------------------------
+# DSE scoring: the paper's three factor rules, applied analytically
+# ---------------------------------------------------------------------------
+
+def _act_dtype_bytes(flow: FlowConfig) -> int:
+    return 2 if flow.precision == "bf16" else 4
+
+_REMAT_FACTOR = {"none": 10.0, "block": 2.0, "nested": 1.0}
+
+
+def estimate_footprint(cfg: ModelConfig, shape: ShapeConfig, flow: FlowConfig,
+                       devices: int = 1) -> Dict[str, float]:
+    """Per-device HBM footprint prediction (rule 3 — the resource budget).
+
+    The MACC-count-predicts-DSP analogue: an analytic byte count good enough
+    to *prune* candidates; the dry-run's ``memory_analysis()`` is the
+    place-and-route ground truth for the survivors.  Weights/optimizer are
+    FSDP-sharded over ``devices``; activation transients shrink with
+    microbatching, remat strength, and bf16 storage.
+    """
+    n = count_params(cfg)
+    adt = _act_dtype_bytes(flow)
+    if cfg.family == "cnn":
+        # early conv activations dominate: B x H x W x C at full resolution
+        act_units = shape.global_batch * cfg.image_size ** 2 * max(
+            cfg.image_channels, 8)
+        width = 1.0
+    else:
+        act_units = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1) * cfg.d_model
+        width = max(1.0, cfg.d_ff / max(cfg.d_model, 1) / 4)
+    out: Dict[str, float] = {}
+    if shape.kind == "train":
+        # fp32 master params + grads + AdamW m,v — FSDP-sharded
+        out["params"] = 4.0 * n / devices
+        out["grads"] = 4.0 * n / devices
+        out["optimizer"] = 8.0 * n / devices
+        mb = max(flow.microbatches, 1)
+        per_mb = act_units / devices / mb
+        remat = _REMAT_FACTOR.get(flow.remat, 2.0)
+        out["activations"] = per_mb * adt * cfg.n_layers * remat * width
+        # chunked-CE logits block (fp32), rematerialized per chunk
+        b_loc = max(shape.global_batch // devices // mb, 1)
+        chunk = min(flow.ce_chunk, shape.seq_len)
+        out["logits"] = 4.0 * b_loc * chunk * cfg.padded_vocab
+    else:
+        out["params"] = float(adt) * n / devices
+        out["activations"] = act_units / devices * adt * 4
+        b_loc = max(shape.global_batch // devices, 1)
+        out["logits"] = 4.0 * b_loc * cfg.padded_vocab
+        if shape.kind == "decode" and cfg.attention is not None:
+            a = cfg.attention
+            C = min(shape.seq_len, a.window or shape.seq_len)
+            n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+            out["kv_cache"] = (2.0 * C * a.n_kv_heads * a.head_dim * adt *
+                               b_loc * n_attn)
+    out["total"] = sum(out.values())
+    return out
+
+
+def estimate_step_seconds(cfg: ModelConfig, shape: ShapeConfig,
+                          flow: FlowConfig, devices: int = 1,
+                          device: str = "v5e") -> Dict[str, float]:
+    """Roofline step-time prediction (rules 1–2 — the bandwidth roof).
+
+    Candidates are ranked by ``max(compute, memory)`` time; passes that are
+    off inflate the byte side the way their FPGA counterparts did (no cached
+    writes -> read-modify-write per K step; no fusion -> intermediate arrays
+    round-trip HBM; fp32 -> half MXU rate, double bytes).
+    """
+    if device not in DEVICE_PRESETS:
+        raise ValueError(f"unknown device {device!r}; "
+                         f"known: {sorted(DEVICE_PRESETS)}")
+    dev = DEVICE_PRESETS[device]
+    flops = model_flops(cfg, shape) + attention_flops(cfg, shape)
+    peak = dev["bf16_flops"] * (1.0 if flow.precision == "bf16" else 0.5)
+    adt = _act_dtype_bytes(flow)
+    bytes_ = hbm_bytes_kernel_path(cfg, shape, dtype_bytes=adt)
+    if not flow.cached_writes:
+        bytes_ *= 3.0
+    if not flow.fuse_epilogues:
+        bytes_ *= 1.5
+    if not flow.tile_select:
+        # minimal 128-tiles re-stream weights once per output tile row
+        bytes_ *= 2.0
+    if shape.kind == "train":
+        # memory savers are not free: each extra microbatch re-gathers the
+        # sharded weights; remat recomputes (part of) the forward in backward
+        n = count_params(cfg, active_only=cfg.moe is not None)
+        bytes_ += (max(flow.microbatches, 1) - 1) * n * adt
+        flops *= {"none": 1.0, "block": 4.0 / 3.0,
+                  "nested": 1.5}.get(flow.remat, 4.0 / 3.0)
+    compute_s = flops / (peak * devices)
+    memory_s = bytes_ / (dev["hbm_bw"] * devices)
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "step_s": max(compute_s, memory_s),
+            "bound": "compute" if compute_s >= memory_s else "memory"}

@@ -1,1 +1,9 @@
 from repro.core.passes import caching, folding, fusion, precision, streaming, tiling  # noqa: F401
+
+
+def default_passes():
+    """The default pipeline's pass instances, in execution order."""
+    from repro.core.passmanager import GraphBuildPass
+    return [GraphBuildPass(), fusion.FusionPass(), streaming.StreamingPass(),
+            folding.FoldingPass(), tiling.TilingPass(),
+            precision.PrecisionPass(), caching.CachingPass()]

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro.core.passmanager import Pass, PlanContext
+
 
 @dataclass(frozen=True)
 class CachingPlan:
@@ -22,3 +24,23 @@ class CachingPlan:
 
 def run(flow) -> CachingPlan:
     return CachingPlan(vmem_accumulate=flow.cached_writes)
+
+
+class CachingPass(Pass):
+    name = "caching"
+    paper = "CW §IV-D"
+
+    def run(self, ctx: PlanContext) -> None:
+        cp = run(ctx.flow)
+        ctx.artifacts["cache"] = cp
+        ctx.stats[self.name] = {"applied": True,
+                                "vmem_accumulate": cp.vmem_accumulate,
+                                "donate_state": cp.donate_state,
+                                "remat": ctx.flow.remat}
+
+    def tunable_space(self, cfg, flow, shape):
+        space = {"cached_writes": (True, False)}
+        if shape.kind == "train":
+            # remat is the training-side memory-for-compute cache policy
+            space["remat"] = ("block", "nested", "none")
+        return space

@@ -11,6 +11,7 @@ from dataclasses import dataclass
 from typing import List
 
 from repro.core.graph import Graph, iso_groups
+from repro.core.passmanager import Pass, PlanContext
 
 
 @dataclass(frozen=True)
@@ -54,3 +55,27 @@ def run(graph: Graph, *, enabled: bool, min_reps: int = 2) -> List[Unit]:
                     units.append(Unit((k,)))
         i = j
     return units
+
+
+class FoldingPass(Pass):
+    name = "folding"
+    paper = "PK §IV-H"
+
+    def run(self, ctx: PlanContext) -> None:
+        stream = ctx.artifacts["stream"]      # runs after StreamingPass
+        enabled = ctx.flow.fold_layers and stream.mode == "folded"
+        units = run(ctx.graph, enabled=enabled)
+        ctx.artifacts["units"] = units
+        folded = [u for u in units if u.folded]
+        ctx.stats[self.name] = {
+            "applied": True, "enabled": enabled, "n_units": len(units),
+            "n_folded": len(folded),
+            "folded_blocks": sum(len(u.indices) for u in folded),
+            "groups": [(u.reps, u.period) for u in folded],
+        }
+
+    def tunable_space(self, cfg, flow, shape):
+        space = {"fold_layers": (True, False)}
+        if shape.kind == "train":
+            space["scan_unroll"] = flow.tuning.scan_unroll_candidates
+        return space

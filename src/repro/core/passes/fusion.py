@@ -18,6 +18,7 @@ from __future__ import annotations
 from typing import List
 
 from repro.core.graph import Block, Graph, MicroOp
+from repro.core.passmanager import Pass, PlanContext
 
 
 def _fuse_block(b: Block, fold_bn: bool) -> None:
@@ -92,3 +93,31 @@ def run(graph: Graph, *, fold_bn: bool) -> Graph:
     for b in graph.blocks:
         _fuse_block(b, fold_bn)
     return graph
+
+
+class FusionPass(Pass):
+    name = "fusion"
+    paper = "LF §IV-C"
+
+    def applies_to(self, cfg, flow, shape) -> bool:
+        return flow.fuse_epilogues
+
+    def run(self, ctx: PlanContext) -> None:
+        before = sum(len(b.ops) for b in ctx.graph.blocks)
+        run(ctx.graph, fold_bn=ctx.shape.kind != "train")
+        after = sum(len(b.ops) for b in ctx.graph.blocks)
+        epilogues = {"act": 0, "bias": 0, "residual": 0, "bn": 0, "glu": 0}
+        for b in ctx.graph.blocks:
+            for op in b.ops:
+                for k in ("act", "bias", "residual", "bn"):
+                    if op.attrs.get(k):
+                        epilogues[k] += 1
+                if op.op == "glu_matmul":
+                    epilogues["glu"] += 1
+        ctx.stats[self.name] = {"applied": True, "ops_before": before,
+                                "ops_after": after,
+                                "ops_removed": before - after,
+                                "epilogues": epilogues}
+
+    def tunable_space(self, cfg, flow, shape):
+        return {"fuse_epilogues": (True, False)}

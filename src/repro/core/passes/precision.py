@@ -12,6 +12,8 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 
+from repro.core.passmanager import Pass, PlanContext
+
 
 @dataclass(frozen=True)
 class PrecisionPlan:
@@ -26,3 +28,21 @@ def run(flow, shape) -> PrecisionPlan:
         pdt = jnp.bfloat16 if shape.kind != "train" else jnp.float32
         return PrecisionPlan(jnp.bfloat16, pdt)
     return PrecisionPlan(jnp.float32, jnp.float32)
+
+
+class PrecisionPass(Pass):
+    name = "precision"
+    paper = "OF §IV-I"
+
+    def run(self, ctx: PlanContext) -> None:
+        prec = run(ctx.flow, ctx.shape)
+        ctx.artifacts["prec"] = prec
+        ctx.stats[self.name] = {
+            "applied": True,
+            "compute": jnp.dtype(prec.compute_dtype).name,
+            "param": jnp.dtype(prec.param_dtype).name,
+            "accum": jnp.dtype(prec.accum_dtype).name,
+        }
+
+    def tunable_space(self, cfg, flow, shape):
+        return {"precision": ("bf16", "fp32")}

@@ -22,6 +22,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
+from repro.core.passmanager import Pass, PlanContext
+
 
 PIPELINE_PARAM_LIMIT = 100_000_000   # "fits on chip unrolled" heuristic
 
@@ -61,3 +63,23 @@ def run(graph, cfg, flow, mesh_axes: Tuple[str, ...] = ()) -> StreamPlan:
         boundaries = tuple(layer_idx[i * per] for i in range(n_stages))
     mb = max(flow.microbatches, n_stages if pp else flow.microbatches)
     return StreamPlan(mode, pp, n_stages, mb, boundaries)
+
+
+class StreamingPass(Pass):
+    name = "streaming"
+    paper = "CH/AR/CE §IV-E–G"
+
+    def run(self, ctx: PlanContext) -> None:
+        sp = run(ctx.graph, ctx.cfg, ctx.flow, ctx.mesh_axes)
+        ctx.artifacts["stream"] = sp
+        ctx.stats[self.name] = {"applied": True, "mode": sp.mode,
+                                "n_stages": sp.n_stages,
+                                "microbatches": sp.microbatches,
+                                "pp_axis": sp.pp_axis}
+
+    def tunable_space(self, cfg, flow, shape):
+        if shape.kind != "train":
+            return {}
+        # gradient-accumulation microbatches trade activation transients
+        # against one extra round of weight gathers per microbatch
+        return {"microbatches": flow.tuning.microbatch_candidates}

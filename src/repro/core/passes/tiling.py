@@ -20,19 +20,24 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
 
+from repro.core.passmanager import Pass, PlanContext
+
 
 def _fit(n: int, target: int, align: int) -> int:
-    """Largest multiple of ``align`` that divides n and is <= target; falls
-    back to n itself when n < align (kernel pads internally)."""
+    """Largest multiple of ``align`` that divides n and is <= target; when no
+    aligned divisor exists, the largest divisor of n <= target (rule 2: even
+    division — no prologue/epilogue grid steps).  n itself is returned when
+    n < align (kernel pads internally)."""
     if n <= align:
         return n
-    best = align
     t = min(target, n)
     for cand in range(t - t % align, 0, -align):
         if n % cand == 0:
-            best = cand
-            break
-    return best
+            return cand
+    for cand in range(t, 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
 
 
 def select_matmul_tile(m: int, k: int, n: int, *, vmem: int,
@@ -85,6 +90,7 @@ def run(cfg, shape, flow) -> Dict[str, object]:
         tiles["decode_attention"] = 512
         tiles["conv2d"] = (8, 128)
         tiles["wkv_chunk"] = 16
+        tiles["ce_chunk"] = flow.ce_chunk
         return tiles
     d, f = cfg.d_model, cfg.d_ff
     seq = shape.seq_len if shape.kind != "decode" else 1
@@ -97,4 +103,26 @@ def run(cfg, shape, flow) -> Dict[str, object]:
         tiles["decode_attention"] = max(512, _fit(skv, 2048, 512))
     tiles["conv2d"] = (8, 128)
     tiles["wkv_chunk"] = 32
+    tiles["ce_chunk"] = flow.ce_chunk
     return tiles
+
+
+class TilingPass(Pass):
+    name = "tiling"
+    paper = "LU/LT §IV-A/B/J"
+
+    def run(self, ctx: PlanContext) -> None:
+        tiles = run(ctx.cfg, ctx.shape, ctx.flow)
+        ctx.artifacts["tiles"] = tiles
+        stats = {"applied": True, "selected": ctx.flow.tile_select,
+                 "tiles": dict(tiles)}
+        bm, bk, bn = tiles["matmul"]
+        stats["matmul_workingset_bytes"] = (bm * bk + bk * bn) * 2 + bm * bn * 6
+        ctx.stats[self.name] = stats
+
+    def tunable_space(self, cfg, flow, shape):
+        space = {"tile_select": (True, False),
+                 "vmem_budget_bytes": flow.tuning.vmem_candidates}
+        if shape.kind == "train":
+            space["ce_chunk"] = flow.tuning.ce_chunk_candidates
+        return space

@@ -1,13 +1,17 @@
-"""ExecutionPlan — the product of the compilation flow's pass pipeline."""
+"""ExecutionPlan — the product of the compilation flow's pass pipeline.
+
+The pipeline itself lives in :mod:`repro.core.passmanager`; ``build_plan`` is
+a thin wrapper over ``PassManager.default_pipeline()`` kept as the stable
+entry point every launcher/test uses.
+"""
 from __future__ import annotations
 
-import copy
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
 from repro.core.graph import Graph
-from repro.core.passes import caching, folding, fusion, precision, streaming, tiling
+from repro.core.passes import caching, precision, streaming
 from repro.core.passes.folding import Unit
 
 
@@ -23,6 +27,10 @@ class ExecutionPlan:
     prec: precision.PrecisionPlan
     cache: caching.CachingPlan
     rules: Optional[Any] = None      # ShardingRules (distributed runtime)
+    # pass-pipeline instrumentation (PassManager)
+    pass_stats: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    pass_timings_ms: Dict[str, float] = field(default_factory=dict)
+    trace: List[str] = field(default_factory=list)
 
     @property
     def cache_len(self) -> int:
@@ -33,7 +41,23 @@ class ExecutionPlan:
             c = min(c, w)
         return c
 
-    def describe(self) -> str:
+    def _stat_line(self, name: str) -> Optional[str]:
+        st = self.pass_stats.get(name)
+        if st is None:
+            return None
+        if not st.get("applied"):
+            return f"    {name}: skipped"
+        parts = []
+        for k, v in st.items():
+            if k == "applied":
+                continue
+            parts.append(f"{k}={v}")
+        return f"    {name}: " + " ".join(parts)
+
+    def describe(self, stats: bool = False) -> str:
+        """Human-readable plan summary.  Deterministic for fixed inputs (no
+        timings), so it doubles as the golden-snapshot format; ``stats=True``
+        appends each pass's reported stats."""
         folded = [u for u in self.units if u.folded]
         lines = [
             f"plan[{self.cfg.name} x {self.shape.name}] mode={self.stream.mode}",
@@ -44,23 +68,20 @@ class ExecutionPlan:
             ", ".join(f"{u.reps}x{u.period}" for u in folded) + ")",
             f"  tiles: {self.tiles}",
         ]
+        if stats:
+            lines.append("  pass stats:")
+            for name in self.pass_stats:
+                line = self._stat_line(name)
+                if line:
+                    lines.append(line)
         return "\n".join(lines)
 
 
 def build_plan(cfg: ModelConfig, flow: FlowConfig, shape: ShapeConfig,
                mesh_axes: Tuple[str, ...] = (), rules=None,
                graph: Optional[Graph] = None) -> ExecutionPlan:
-    """Run the full pass pipeline: build graph -> LF fusion -> PK folding ->
-    LU/LT tiling -> OF precision -> CW caching -> CH/CE streaming."""
-    from repro.models.lm import build_graph
-    g = copy.deepcopy(graph) if graph is not None else build_graph(cfg)
-    if flow.fuse_epilogues:
-        g = fusion.run(g, fold_bn=shape.kind != "train")
-    stream = streaming.run(g, cfg, flow, mesh_axes)
-    fold_on = flow.fold_layers and stream.mode == "folded"
-    units = folding.run(g, enabled=fold_on)
-    tiles = tiling.run(cfg, shape, flow)
-    prec = precision.run(flow, shape)
-    cach = caching.run(flow)
-    return ExecutionPlan(cfg, flow, shape, g, units, tiles, stream, prec,
-                         cach, rules)
+    """Run the default pass pipeline: build graph -> LF fusion -> CH/CE
+    streaming -> PK folding -> LU/LT tiling -> OF precision -> CW caching."""
+    from repro.core.passmanager import PassManager
+    return PassManager.default_pipeline().run(
+        cfg, flow, shape, mesh_axes=mesh_axes, rules=rules, graph=graph)

@@ -36,26 +36,8 @@ from repro.train.trainer import make_train_step
 # ---------------------------------------------------------------------------
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
-    B = shape.global_batch
-    S = shape.seq_len if shape.kind != "decode" else 1
-    sds = jax.ShapeDtypeStruct
-    if cfg.family == "cnn":
-        out = {"images": sds((B, cfg.image_size, cfg.image_size,
-                              cfg.image_channels), jnp.float32)}
-        if shape.kind == "train":
-            out["labels"] = sds((B,), jnp.int32)
-        return out
-    out = {"tokens": sds((B, S), jnp.int32)}
-    if shape.kind == "train":
-        out["labels"] = sds((B, S), jnp.int32)
-    if shape.kind != "decode":
-        if cfg.n_patch_tokens:
-            out["patches"] = sds((B, cfg.n_patch_tokens, cfg.d_vision),
-                                 jnp.float32)
-        if cfg.n_encoder_layers:
-            out["frames"] = sds((B, cfg.encoder_seq, cfg.d_model),
-                                jnp.float32)
-    return out
+    from repro.core.dse import abstract_inputs
+    return abstract_inputs(cfg, shape)
 
 
 def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -133,7 +115,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                            "multi_pod": multi_pod,
                            "mode": plan.stream.mode,
                            "folds": [[u.reps, u.period] for u in plan.units
-                                     if u.folded]}
+                                     if u.folded],
+                           "pass_stats": plan.pass_stats,
+                           "pass_timings_ms": plan.pass_timings_ms}
     with mesh:
         jfn = jax.jit(fn, in_shardings=shardings,
                       out_shardings=out_shardings, donate_argnums=donate)
@@ -151,10 +135,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "alias_bytes": mem.alias_size_in_bytes,
         "code_bytes": mem.generated_code_size_in_bytes,
     }
-    per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes +
-               mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    from repro.core.dse import per_device_bytes
+    per_dev = per_device_bytes(mem)
     res["memory"]["per_device_bytes"] = per_dev
-    res["memory"]["fits_16g"] = bool(per_dev < 16 * 1024 ** 3)
+    budget = plan.flow.tuning.hbm_bytes
+    res["memory"]["budget_bytes"] = budget
+    res["memory"]["fits_budget"] = bool(per_dev < budget)
     ca = compiled.cost_analysis() or {}
     res["cost_analysis"] = {k: float(ca[k]) for k in
                             ("flops", "bytes accessed") if k in ca}
@@ -183,6 +169,11 @@ def main():
     ap.add_argument("--autotune", action="store_true",
                     help="DSE: pick train-cell microbatch counts so the "
                          "per-device footprint fits HBM")
+    ap.add_argument("--explore", action="store_true",
+                    help="full DSE: estimator-pruned candidate sweep with "
+                         "compile-in-the-loop validation of the top-k")
+    ap.add_argument("--hbm-gib", type=float, default=None,
+                    help="per-device HBM budget in GiB (default: 16, v5e)")
     args = ap.parse_args()
 
     results = []
@@ -207,15 +198,42 @@ def main():
             mesh_cache[mp] = make_production_mesh(multi_pod=mp)
         try:
             base_flow = FlowConfig(mode=args.flow_mode)
-            if args.autotune and SHAPES[s].kind == "train":
+            if args.hbm_gib is not None:
+                from repro.configs.base import TuningConfig
+                import dataclasses as _dc
+                base_flow = _dc.replace(base_flow, tuning=TuningConfig(
+                    hbm_bytes=int(args.hbm_gib * 2 ** 30)))
+            if args.explore:
+                from repro.core import dse
+                mesh = mesh_cache[mp]
+                n_dev = int(mesh.devices.size)
+                records = {}       # reuse the validator's compiles for `best`
+
+                def validator(flow):
+                    records[flow] = run_cell(a, s, mesh=mesh, flow=flow)
+                    return records[flow]["memory"]
+
+                er = dse.explore(get_config(a), SHAPES[s], base_flow,
+                                 devices=n_dev, validator=validator)
+                print(er.describe())
+                r = records.get(er.best.flow) or run_cell(
+                    a, s, multi_pod=mp, mesh=mesh, flow=er.best.flow)
+                r["dse"] = {"knobs": er.best.knob_str(),
+                            "n_enumerated": er.n_enumerated,
+                            "validated": len(er.validated),
+                            "budget_bytes": er.budget_bytes}
+            elif args.autotune and SHAPES[s].kind == "train":
                 from repro.core.dse import autotune_train_cell
                 _, r = autotune_train_cell(a, s, mesh_cache[mp], base_flow)
             else:
                 r = run_cell(a, s, multi_pod=mp, mesh=mesh_cache[mp],
                              flow=base_flow)
             gb = r["memory"]["per_device_bytes"] / 2 ** 30
+            budget_gb = r["memory"]["budget_bytes"] / 2 ** 30
+            fit = "" if r["memory"]["fits_budget"] else " OVER-BUDGET"
             print(f"OK   {a} x {s} pods={1+mp} compile={r['compile_s']}s "
-                  f"mem/dev={gb:.2f}GiB flops={r['cost_analysis'].get('flops', 0):.3g}")
+                  f"mem/dev={gb:.2f}GiB (budget {budget_gb:.2f}GiB{fit}) "
+                  f"flops={r['cost_analysis'].get('flops', 0):.3g}")
         except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
             r = {"arch": a, "shape": s, "multi_pod": mp,
                  "error": f"{type(e).__name__}: {e}"}

@@ -28,13 +28,24 @@ def main():
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--on-device-loop", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="explore the pass design space (estimator-pruned, "
+                         "compile-validated) for the decode cell")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     shape = ShapeConfig("cli", "decode", args.prompt_len + args.steps,
                         args.batch)
-    plan = build_plan(cfg, FlowConfig(mode="folded"), shape)
-    print(plan.describe())
+    flow = FlowConfig(mode="folded")
+    if args.autotune:
+        from repro.core import dse
+        er = dse.explore(cfg, shape, flow,
+                         validator=dse.compile_validator(cfg, shape))
+        print(er.describe())
+        plan = er.plan
+    else:
+        plan = build_plan(cfg, flow, shape)
+    print(plan.describe(stats=True))
     params = lowering.init_params(plan, jax.random.key(0))
     eng = Engine(plan, params, EngineConfig(temperature=args.temperature))
 

@@ -34,13 +34,23 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--mode", default="folded")
+    ap.add_argument("--autotune", action="store_true",
+                    help="explore the pass design space (estimator-pruned, "
+                         "compile-validated) instead of the fixed flow")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     shape = ShapeConfig("cli", "train", args.seq, args.batch)
     flow = FlowConfig(mode=args.mode, microbatches=args.microbatches)
-    plan = build_plan(cfg, flow, shape)
-    print(plan.describe())
+    if args.autotune:
+        from repro.core import dse
+        er = dse.explore(cfg, shape, flow,
+                         validator=dse.compile_validator(cfg, shape))
+        print(er.describe())
+        flow, plan = er.best.flow, er.plan
+    else:
+        plan = build_plan(cfg, flow, shape)
+    print(plan.describe(stats=True))
 
     if cfg.family == "cnn":
         data = SyntheticImages(

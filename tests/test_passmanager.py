@@ -1,0 +1,113 @@
+"""PassManager subsystem tests: the uniform Pass protocol, per-pass stats and
+timing instrumentation, pluggability, and build_plan equivalence."""
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import FlowConfig, SHAPES, ShapeConfig
+from repro.core.passmanager import Pass, PassManager, PlanContext
+from repro.core.plan import build_plan
+
+from conftest import SMOKE_SHAPE
+
+SERVE = ShapeConfig("bench", "prefill", 64, 8)
+
+EXPECTED_PASSES = ["graph", "fusion", "streaming", "folding", "tiling",
+                   "precision", "caching"]
+
+
+def test_default_pipeline_order():
+    pm = PassManager.default_pipeline()
+    assert [p.name for p in pm.passes] == EXPECTED_PASSES
+
+
+def test_build_plan_is_thin_wrapper():
+    """build_plan == default_pipeline().run for the same inputs."""
+    cfg, flow = get_smoke("llama3.2-1b"), FlowConfig(mode="folded")
+    p1 = build_plan(cfg, flow, SMOKE_SHAPE)
+    p2 = PassManager.default_pipeline().run(cfg, flow, SMOKE_SHAPE)
+    assert p1.describe(stats=True) == p2.describe(stats=True)
+    assert [u.indices for u in p1.units] == [u.indices for u in p2.units]
+    assert p1.tiles == p2.tiles
+
+
+def test_every_pass_reports_stats_and_timing():
+    plan = build_plan(get_smoke("llama3.2-1b"), FlowConfig(mode="folded"),
+                      SMOKE_SHAPE)
+    assert list(plan.pass_stats) == EXPECTED_PASSES
+    for name, st in plan.pass_stats.items():
+        assert st["applied"], name
+        assert plan.pass_timings_ms[name] >= 0
+    assert len(plan.trace) == len(EXPECTED_PASSES)
+
+
+def test_skipped_pass_recorded():
+    plan = build_plan(get_smoke("llama3.2-1b"),
+                      FlowConfig(fuse_epilogues=False, mode="folded"),
+                      SMOKE_SHAPE)
+    assert plan.pass_stats["fusion"] == {"applied": False}
+    assert "fusion" not in plan.pass_timings_ms
+    assert "skip fusion" in plan.trace
+
+
+def test_fusion_stats_count_rewrites():
+    plan = build_plan(get_smoke("llama3.2-1b"), FlowConfig(mode="folded"),
+                      SMOKE_SHAPE)
+    st = plan.pass_stats["fusion"]
+    assert st["ops_removed"] == st["ops_before"] - st["ops_after"] > 0
+    assert st["epilogues"]["glu"] > 0          # swiglu FFNs fused
+
+
+def test_replaced_pass_plugs_in():
+    """A custom pass swapped into the pipeline drives the plan artifact."""
+    class FixedTiles(Pass):
+        name = "tiling"
+        paper = "test"
+
+        def run(self, ctx: PlanContext) -> None:
+            ctx.artifacts["tiles"] = {"matmul": (8, 8, 8)}
+            ctx.stats[self.name] = {"applied": True, "fixed": True}
+
+    pm = PassManager.default_pipeline().replaced(FixedTiles())
+    plan = pm.run(get_smoke("llama3.2-1b"), FlowConfig(mode="folded"),
+                  SMOKE_SHAPE)
+    assert plan.tiles == {"matmul": (8, 8, 8)}
+    assert plan.pass_stats["tiling"] == {"applied": True, "fixed": True}
+
+
+def test_duplicate_pass_names_rejected():
+    pm = PassManager.default_pipeline()
+    with pytest.raises(ValueError):
+        PassManager(pm.passes + [pm.passes[-1]])
+
+
+def test_incomplete_pipeline_rejected():
+    pm = PassManager.default_pipeline()
+    with pytest.raises(ValueError, match="tiles"):
+        PassManager([p for p in pm.passes if p.name != "tiling"]).run(
+            get_smoke("llama3.2-1b"), FlowConfig(mode="folded"), SMOKE_SHAPE)
+
+
+def test_tunable_space_train_vs_serve():
+    pm = PassManager.default_pipeline()
+    cfg, flow = get_config("llama3.2-1b"), FlowConfig()
+    train = pm.tunable_space(cfg, flow, SHAPES["train_4k"])
+    serve = pm.tunable_space(cfg, flow, SERVE)
+    for key in ("fuse_epilogues", "fold_layers", "tile_select",
+                "cached_writes", "precision", "vmem_budget_bytes"):
+        assert key in train and key in serve
+    for key in ("microbatches", "remat", "scan_unroll", "ce_chunk"):
+        assert key in train and key not in serve
+    # a currently-off pass still exposes its knob (the explorer can enable it)
+    off = pm.tunable_space(cfg, FlowConfig(fuse_epilogues=False),
+                           SHAPES["train_4k"])
+    assert off["fuse_epilogues"] == (True, False)
+
+
+def test_graph_pass_isolates_caller_graph():
+    """A caller-provided graph must not be mutated by fusion (deepcopy)."""
+    from repro.models.lm import build_graph
+    cfg = get_smoke("llama3.2-1b")
+    g = build_graph(cfg)
+    ops_before = sum(len(b.ops) for b in g.blocks)
+    build_plan(cfg, FlowConfig(mode="folded"), SMOKE_SHAPE, graph=g)
+    assert sum(len(b.ops) for b in g.blocks) == ops_before

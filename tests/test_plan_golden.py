@@ -1,0 +1,72 @@
+"""Golden plan snapshots: the pass pipeline's output for the paper's three
+CNNs plus an LM config, base vs optimized flows.  These pin the plan-level
+behaviour of the whole pipeline (units, tiles, mode) — any pass change that
+shifts them must update the goldens deliberately."""
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+from repro.core.plan import build_plan
+
+SERVE = ShapeConfig("bench", "prefill", 64, 8)
+SMOKE_TRAIN = ShapeConfig("smoke", "train", 16, 2)
+
+BASE_TILES = ("{'matmul': (128, 128, 128), 'attention': (128, 128), "
+              "'decode_attention': 512, 'conv2d': (8, 128), "
+              "'wkv_chunk': 16, 'ce_chunk': 256}")
+
+GOLDEN = {
+    ("lenet5", "opt"): """\
+plan[lenet5 x bench] mode=pipelined
+  passes: fuse=True fold=True tiles=True cw=True prec=bf16
+  units: 3 (0 folded: )
+  tiles: {'matmul': (64, 120, 84), 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}""",
+    ("lenet5", "base"): f"""\
+plan[lenet5 x bench] mode=folded
+  passes: fuse=False fold=False tiles=False cw=False prec=fp32
+  units: 3 (0 folded: )
+  tiles: {BASE_TILES}""",
+    ("mobilenetv1", "opt"): """\
+plan[mobilenetv1 x bench] mode=pipelined
+  passes: fuse=True fold=True tiles=True cw=True prec=bf16
+  units: 15 (0 folded: )
+  tiles: {'matmul': (64, 1024, 512), 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}""",
+    ("mobilenetv1", "base"): f"""\
+plan[mobilenetv1 x bench] mode=folded
+  passes: fuse=False fold=False tiles=False cw=False prec=fp32
+  units: 15 (0 folded: )
+  tiles: {BASE_TILES}""",
+    ("resnet34", "opt"): """\
+plan[resnet34 x bench] mode=pipelined
+  passes: fuse=True fold=True tiles=True cw=True prec=bf16
+  units: 18 (0 folded: )
+  tiles: {'matmul': (64, 512, 512), 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}""",
+    ("resnet34", "base"): f"""\
+plan[resnet34 x bench] mode=folded
+  passes: fuse=False fold=False tiles=False cw=False prec=fp32
+  units: 18 (0 folded: )
+  tiles: {BASE_TILES}""",
+}
+
+
+@pytest.mark.parametrize("arch,variant", sorted(GOLDEN))
+def test_cnn_plan_golden(arch, variant):
+    flow = FlowConfig(mode="auto") if variant == "opt" else FlowConfig().base()
+    plan = build_plan(get_config(arch), flow, SERVE)
+    assert plan.describe() == GOLDEN[(arch, variant)]
+
+
+def test_lm_plan_golden():
+    plan = build_plan(get_smoke("llama3.2-1b"), FlowConfig(mode="folded"),
+                      SMOKE_TRAIN)
+    assert plan.describe() == """\
+plan[llama3.2-1b x smoke] mode=folded
+  passes: fuse=True fold=True tiles=True cw=True prec=bf16
+  units: 3 (1 folded: 3x1)
+  tiles: {'matmul': (16, 64, 192), 'attention': (16, 16), 'decode_attention': 512, 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}"""
+
+
+def test_describe_is_deterministic():
+    args = (get_config("resnet34"), FlowConfig(mode="auto"), SERVE)
+    assert build_plan(*args).describe(stats=True) == \
+        build_plan(*args).describe(stats=True)
