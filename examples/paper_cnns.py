@@ -14,10 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import flow as rflow
 from repro.configs import get_config, get_smoke
 from repro.configs.base import FlowConfig, ShapeConfig
-from repro.core import lowering
-from repro.core.plan import build_plan
 
 SERVE = ShapeConfig("serve", "prefill", 64, 8)
 
@@ -45,13 +44,13 @@ def main():
         # emulated on the CPU backend; OF targets the TPU MXU)
         for label, flow in [("base", FlowConfig().base()),
                             ("optimized", FlowConfig(precision="fp32"))]:
-            plan = build_plan(cfg, flow, SERVE)
-            params = lowering.init_params(plan, jax.random.key(0))
-            apply = lowering.make_apply(plan)
-            f = jax.jit(lambda p, b: apply(p, b, mode="prefill")[0])
+            cm = rflow.compile(cfg, SERVE, flow)
+            params = cm.init_params(jax.random.key(0))
+            f = lambda p, b: cm.prefill(p, b)[0]  # noqa: E731 — jitted stage
             ms = bench(f, params, batch)
-            n_ops = sum(len(b.ops) for b in plan.graph.blocks)
-            rows.append((label, plan.stream.mode, flow.precision, n_ops, ms))
+            n_ops = sum(len(b.ops) for b in cm.plan.graph.blocks)
+            rows.append((label, cm.plan.stream.mode, flow.precision, n_ops,
+                         ms))
         print(f"\n{name} (batch {B}, {cfg.image_size}px):")
         for label, mode, prec, n_ops, ms in rows:
             print(f"  {label:10s} mode={mode:9s} prec={prec} "

@@ -1,8 +1,10 @@
-"""Quickstart: the compilation flow end to end on one small model.
+"""Quickstart: the compilation flow end to end through the public API.
 
-Builds the graph for llama3.2-1b (reduced config), shows what each pass did
-(fusion rewrites, folding groups, tile selection), runs one training step and
-generates a few tokens.
+``repro.flow.compile`` is the one front door: frozen model (config) in,
+compiled model out.  The returned ``CompiledModel`` owns the ExecutionPlan,
+the jitted train/prefill/decode/generate callables and the flow report;
+kernel backends resolve per op through the KernelRegistry (``backend="auto"``
+→ Pallas on TPU, reference on CPU).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,51 +17,48 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke
+from repro import flow
 from repro.configs.base import FlowConfig, ShapeConfig
-from repro.core import lowering
-from repro.core.plan import build_plan
-from repro.models.lm import build_graph
-from repro.serving.engine import Engine, EngineConfig
+from repro.optim.adamw import AdamW
 
 
 def main():
-    cfg = get_smoke("llama3.2-1b")
     shape = ShapeConfig("quickstart", "train", 32, 4)
 
-    # --- the flow: graph -> passes -> plan ---------------------------------
-    raw = build_graph(cfg)
-    n_ops_before = sum(len(b.ops) for b in raw.blocks)
-    plan = build_plan(cfg, FlowConfig(mode="folded"), shape)
-    n_ops_after = sum(len(b.ops) for b in plan.graph.blocks)
-    print(plan.describe())
-    print(f"LF fusion: {n_ops_before} micro-ops -> {n_ops_after}")
-    fused = [op.op for b in plan.graph.blocks for op in b.ops
+    # --- the flow: one call — graph -> passes -> plan -> compiled model ----
+    cm = flow.compile("llama3.2-1b", shape, smoke=True)
+    print(cm.describe())
+    n_ops = sum(len(b.ops) for b in cm.plan.graph.blocks)
+    fused = [op.op for b in cm.plan.graph.blocks for op in b.ops
              if op.attrs.get("act") or op.op == "glu_matmul"]
-    print(f"fused kernels: {sorted(set(fused))}")
+    print(f"micro-ops after LF fusion: {n_ops}; "
+          f"fused kernels: {sorted(set(fused))}")
 
     # --- base configuration (the paper's unoptimized kernels) --------------
-    base = build_plan(cfg, FlowConfig().base(), shape)
-    print(f"base flow: mode={base.stream.mode} precision="
-          f"{base.flow.precision} folded={any(u.folded for u in base.units)}")
+    base = flow.compile("llama3.2-1b", shape, FlowConfig().base(), smoke=True)
+    print(f"base flow: mode={base.plan.stream.mode} "
+          f"precision={base.flow.precision} "
+          f"folded={any(u.folded for u in base.plan.units)}")
 
-    # --- one training step ---------------------------------------------------
-    params = lowering.init_params(plan, jax.random.key(0))
-    loss_fn = lowering.make_loss_fn(plan)
+    # --- one training step --------------------------------------------------
+    cfg = cm.cfg
+    params = cm.init_params(jax.random.key(0))
     rng = np.random.RandomState(0)
     batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 32)),
                                    jnp.int32),
              "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 32)),
                                    jnp.int32)}
-    (loss, metrics), grads = jax.jit(
-        jax.value_and_grad(loss_fn, has_aux=True))(params, batch)
-    print(f"train step: loss={float(loss):.4f} "
+    opt = AdamW(lr=1e-3)
+    step = cm.train_step(opt)
+    params, _, metrics = step(params, opt.init(params), batch)
+    print(f"train step: loss={float(metrics['loss']):.4f} "
           f"acc={float(metrics['acc']):.3f}")
 
     # --- batched generation (prefill -> rolling-cache decode) ---------------
-    eng = Engine(plan, params, EngineConfig(temperature=0.0))
-    toks, _ = eng.generate({"tokens": batch["tokens"][:, :16]}, steps=8)
+    toks, _ = cm.generate(params, {"tokens": batch["tokens"][:, :16]},
+                          steps=8)
     print(f"generated: {np.asarray(toks)[0].tolist()}")
+    print(cm.describe(stats=True).splitlines()[-1])   # per-stage compile stats
 
 
 if __name__ == "__main__":

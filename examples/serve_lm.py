@@ -15,10 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke
+from repro import flow as rflow
 from repro.configs.base import FlowConfig, ShapeConfig
-from repro.core import lowering
-from repro.core.plan import build_plan
 from repro.serving.engine import Engine, EngineConfig
 
 
@@ -30,12 +28,13 @@ def main():
     ap.add_argument("--steps", type=int, default=24)
     args = ap.parse_args()
 
-    cfg = get_smoke(args.arch)
     shape = ShapeConfig("serve", "decode", args.prompt_len + args.steps,
                         args.batch)
-    plan = build_plan(cfg, FlowConfig(mode="folded"), shape)
-    params = lowering.init_params(plan, jax.random.key(0))
-    eng = Engine(plan, params, EngineConfig(temperature=0.0))
+    cm = rflow.compile(args.arch, shape, FlowConfig(mode="folded"),
+                       smoke=True)
+    cfg = cm.cfg
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params, EngineConfig(temperature=0.0))
 
     rng = np.random.RandomState(0)
     batch = {"tokens": jnp.asarray(

@@ -14,9 +14,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 
-from repro.configs import get_smoke
+from repro import flow as rflow
 from repro.configs.base import FlowConfig, ShapeConfig
-from repro.core.plan import build_plan
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim.adamw import AdamW
 from repro.train.trainer import Trainer, TrainerConfig
@@ -32,16 +31,17 @@ def main():
     ap.add_argument("--compress", action="store_true")
     args = ap.parse_args()
 
-    cfg = get_smoke(args.arch)
     shape = ShapeConfig("example", "train", args.seq, args.batch)
-    plan = build_plan(cfg, FlowConfig(mode="folded"), shape)
-    print(plan.describe())
+    cm = rflow.compile(args.arch, shape, FlowConfig(mode="folded"),
+                       smoke=True)
+    cfg = cm.cfg
+    print(cm.describe())
 
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                                   global_batch=args.batch))
     ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
     tr = Trainer(
-        plan,
+        cm,
         AdamW(lr=3e-3, warmup_steps=20, total_steps=args.steps,
               compress="int8_ef" if args.compress else None),
         TrainerConfig(steps=args.steps, ckpt_dir=ckpt_dir, ckpt_every=50,

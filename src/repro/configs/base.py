@@ -155,8 +155,12 @@ class TuningConfig:
     microbatch_candidates: Tuple[int, ...] = (1, 2, 4, 8)
     scan_unroll_candidates: Tuple[int, ...] = (1, 2, 4)
     ce_chunk_candidates: Tuple[int, ...] = (128, 256, 512)
+    # kernel-backend dimension the KernelSelectPass exposes to the explorer:
+    # "auto" resolves per-op through the KernelRegistry (Pallas on TPU),
+    # "reference" pins the pure-XLA path everywhere.
+    backend_candidates: Tuple[str, ...] = ("auto", "reference")
     top_k: int = 3                         # candidates validated compile-in-loop
-    max_candidates: int = 8192             # enumeration safety cap
+    max_candidates: int = 16384            # enumeration safety cap
 
 
 @dataclass(frozen=True)
@@ -178,8 +182,10 @@ class FlowConfig:
     # training
     remat: str = "block"               # none | block | nested (two-level)
     grad_compression: Optional[str] = None  # None | "int8_ef"
-    # kernels
-    kernel_backend: str = "reference"  # reference | pallas | pallas_interpret
+    # kernels: "auto" resolves per op via the KernelRegistry (Pallas where an
+    # implementation exists and the platform compiles it natively, reference
+    # elsewhere); the explicit values pin one backend for every op.
+    kernel_backend: str = "auto"       # auto | reference | pallas | pallas_interpret
     vmem_budget_bytes: int = 96 * 1024 * 1024  # v5e ~128MiB VMEM, leave headroom
     scan_unroll: int = 1
     ce_chunk: int = 256                # sequence-chunked CE logits block

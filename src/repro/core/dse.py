@@ -147,8 +147,8 @@ def compile_candidate(cfg: ModelConfig, shape: ShapeConfig,
     import jax
     import jax.numpy as jnp
     from repro.core import lowering
-    from repro.core.plan import build_plan
-    plan = build_plan(cfg, flow, shape)
+    from repro.core.plan import _build_plan
+    plan = _build_plan(cfg, flow, shape)
     specs = abstract_inputs(cfg, shape)
     if shape.kind == "train":
         from repro.optim.adamw import AdamW
@@ -160,7 +160,7 @@ def compile_candidate(cfg: ModelConfig, shape: ShapeConfig,
         lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
             pshapes, ostate, specs)
     elif shape.kind == "decode":
-        apply = lowering.make_apply(plan)
+        apply = lowering._make_apply(plan)
         pshapes = lowering.param_shapes(plan)
         state = lowering.init_state(plan, shape.global_batch, abstract=True)
         def fn(params, batch, state, idx):
@@ -170,7 +170,7 @@ def compile_candidate(cfg: ModelConfig, shape: ShapeConfig,
         lowered = jax.jit(fn, donate_argnums=(2,)).lower(
             pshapes, specs, state, jax.ShapeDtypeStruct((), jnp.int32))
     else:
-        apply = lowering.make_apply(plan)
+        apply = lowering._make_apply(plan)
         pshapes = lowering.param_shapes(plan)
         fn = lambda p, b: apply(p, b, mode="prefill")[0]  # noqa: E731
         lowered = jax.jit(fn).lower(pshapes, specs)
@@ -190,12 +190,44 @@ def compile_validator(cfg: ModelConfig,
 # the explorer
 # ---------------------------------------------------------------------------
 
+# Completed searches keyed by (cfg, shape, flow, devices, top_k, space)
+# fingerprint — ``--autotune`` across serve/train/dryrun in one process pays
+# for each identical search once (ROADMAP "explorer caching across cells").
+_EXPLORE_CACHE: Dict[Tuple, ExploreResult] = {}
+_EXPLORE_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _explore_fingerprint(cfg: ModelConfig, shape: ShapeConfig,
+                         flow: FlowConfig, devices: int,
+                         top_k: Optional[int],
+                         space: Optional[Dict[str, Sequence[Any]]],
+                         validated: bool) -> Tuple:
+    space_key = None if space is None else tuple(
+        sorted((k, tuple(v)) for k, v in space.items()))
+    # cfg/shape/flow are frozen dataclasses (hashable); kernel_backend is
+    # part of flow, so backend changes miss the cache as required.
+    # ``validated`` keeps estimator-only results from answering for
+    # compile-validated searches (different validators still alias — they
+    # are all compile-in-the-loop measurements of the same candidates).
+    return (cfg, shape, flow, devices, top_k, space_key, validated)
+
+
+def explore_cache_stats() -> Dict[str, int]:
+    return dict(_EXPLORE_CACHE_STATS)
+
+
+def clear_explore_cache() -> None:
+    _EXPLORE_CACHE.clear()
+    _EXPLORE_CACHE_STATS.update(hits=0, misses=0)
+
+
 def explore(cfg: ModelConfig, shape: ShapeConfig,
             base_flow: Optional[FlowConfig] = None, *,
             devices: int = 1,
             validator: Optional[Callable[[FlowConfig], Dict]] = None,
             space: Optional[Dict[str, Sequence[Any]]] = None,
-            top_k: Optional[int] = None) -> ExploreResult:
+            top_k: Optional[int] = None,
+            use_cache: bool = True) -> ExploreResult:
     """Search the joint pass design space for the fastest candidate that
     fits the device budget.
 
@@ -204,8 +236,19 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
     :func:`compile_validator`; the multi-pod dry-run path passes a
     ``run_cell``-backed one).  Without a validator the estimator ranking
     decides alone.
+
+    Identical searches (same cfg/shape/base-flow/devices fingerprint) are
+    served from a process-level cache — including their recorded
+    validations — so repeated ``--autotune`` invocations in one process
+    don't redo the sweep.  ``use_cache=False`` forces a fresh search.
     """
     flow0 = base_flow if base_flow is not None else FlowConfig(mode="folded")
+    fp_key = _explore_fingerprint(cfg, shape, flow0, devices, top_k, space,
+                                  validator is not None)
+    if use_cache and fp_key in _EXPLORE_CACHE:
+        _EXPLORE_CACHE_STATS["hits"] += 1
+        return _EXPLORE_CACHE[fp_key]
+    _EXPLORE_CACHE_STATS["misses"] += 1
     tuning = flow0.tuning
     budget = tuning.hbm_bytes
     k = top_k if top_k is not None else tuning.top_k
@@ -241,11 +284,14 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
                                # further compiles for report decoration
         best = chosen if chosen is not None else top[0]
 
-    from repro.core.plan import build_plan
-    plan = build_plan(cfg, best.flow, shape)
-    return ExploreResult(best=best, plan=plan, candidates=pool,
-                         n_enumerated=len(enumerated), validated=validated,
-                         budget_bytes=budget)
+    from repro.core.plan import _build_plan
+    plan = _build_plan(cfg, best.flow, shape)
+    result = ExploreResult(best=best, plan=plan, candidates=pool,
+                           n_enumerated=len(enumerated), validated=validated,
+                           budget_bytes=budget)
+    if use_cache:
+        _EXPLORE_CACHE[fp_key] = result
+    return result
 
 
 # ---------------------------------------------------------------------------

@@ -299,6 +299,14 @@ def _run_block(ctx: Ctx, block: Block, bparams, env: Dict[str, Any],
 # ---------------------------------------------------------------------------
 
 def make_apply(plan: ExecutionPlan, head: bool = True):
+    """Deprecated shim over :func:`_make_apply` — reach the apply function
+    through :func:`repro.flow.compile` (``CompiledModel.apply``) instead."""
+    from repro.core.plan import _warn_deprecated
+    _warn_deprecated("repro.core.lowering.make_apply")
+    return _make_apply(plan, head=head)
+
+
+def _make_apply(plan: ExecutionPlan, head: bool = True):
     """Returns apply(params, batch, state, cache_index, mode) ->
     (out, new_state, aux).  ``head=False`` stops before the unembed (training
     uses the chunked-CE loss instead)."""
@@ -445,7 +453,7 @@ def _run_folded(ctx: Ctx, plan: ExecutionPlan, unit: Unit, gparams,
 
 def make_loss_fn(plan: ExecutionPlan):
     cfg = plan.cfg
-    apply = make_apply(plan, head=cfg.family == "cnn")
+    apply = _make_apply(plan, head=cfg.family == "cnn")
     graph = plan.graph
     head_block = graph.blocks[-1]
     assert head_block.kind in ("head", "cnn_head")

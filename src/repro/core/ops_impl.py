@@ -4,9 +4,10 @@ Each op is a function ``fn(ctx, op, p, *args)`` where ``p`` maps param name →
 array (names are the *last path component* of the ParamSpec name).  ``ctx``
 carries execution mode, decode state, sharding-constraint hooks and the
 compilation plan.  The fused ops produced by the fusion pass (``glu_matmul``,
-epilogue attrs on ``matmul``/``conv2d``) are implemented here too; when the
-plan selects the Pallas backend the matmul/attention/conv entry points route
-to :mod:`repro.kernels.ops`.
+epilogue attrs on ``matmul``/``conv2d``) are implemented here too; the
+matmul/attention/conv/recurrence entry points dispatch through the
+:mod:`repro.kernels.registry` using the per-op backend table the
+``kernels`` pass recorded on the plan (``plan.kernels``).
 """
 from __future__ import annotations
 
@@ -17,6 +18,8 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.kernels.registry import plan_kernel
 
 
 # ---------------------------------------------------------------------------
@@ -92,15 +95,14 @@ def _act(x, kind: str):
 
 def _matmul_backend(ctx: Ctx, x, w, *, bias=None, act=None, w2=None):
     """Single entry point for all (possibly fused) matmuls; routes to the
-    Pallas kernel when the plan selects it."""
-    backend = ctx.plan.flow.kernel_backend
-    if backend in ("pallas", "pallas_interpret") and x.ndim >= 2 and w.ndim == 2:
-        from repro.kernels import ops as kops
-        return kops.matmul_fused(
-            x, w, bias=bias, act=act, w2=w2,
-            interpret=backend == "pallas_interpret",
-            tile=ctx.plan.tiles.get("matmul"),
-            out_dtype=ctx.compute_dtype)
+    Pallas kernel when the plan's backend table selects it."""
+    kern = plan_kernel(ctx.plan, "glu_matmul" if w2 is not None else "matmul",
+                       x=x, w=w)
+    if kern is not None:
+        fn, interpret = kern
+        return fn(x, w, bias=bias, act=act, w2=w2, interpret=interpret,
+                  tile=ctx.plan.tiles.get("matmul"),
+                  out_dtype=ctx.compute_dtype)
     dt = ctx.compute_dtype
     y = jnp.matmul(x.astype(dt), w.astype(dt),
                    preferred_element_type=jnp.float32)
@@ -296,18 +298,17 @@ def op_attention(ctx: Ctx, op, p, q, k, v, positions):
     window = attrs.get("window")
     softcap = attrs.get("softcap")
     B, Sq, H, Dh = q.shape
-    backend = ctx.plan.flow.kernel_backend
 
     if ctx.mode in ("train", "prefill") and not cross:
         q = ctx.cst(q, ("batch", "seq_cp", "none", "none"))
         k = ctx.cst(k, ("batch", "gather", "none", "none"))
         v = ctx.cst(v, ("batch", "gather", "none", "none"))
-        if backend in ("pallas", "pallas_interpret") and window != 0:
-            from repro.kernels import ops as kops
-            out = kops.flash_attention(
-                q, k, v, positions, causal=causal, window=window,
-                softcap=softcap, interpret=backend == "pallas_interpret",
-                tile=ctx.plan.tiles.get("attention"))
+        kern = plan_kernel(ctx.plan, "attention", window=window, cross=cross)
+        if kern is not None:
+            fn, interpret = kern
+            out = fn(q, k, v, positions, causal=causal, window=window,
+                     softcap=softcap, interpret=interpret,
+                     tile=ctx.plan.tiles.get("attention"))
         else:
             out = _sdpa(ctx, q, k, v, positions, positions, causal=causal,
                         window=window, softcap=softcap)
@@ -357,12 +358,12 @@ def op_attention(ctx: Ctx, op, p, q, k, v, positions):
     vc = ctx.cst(vc, ("batch", "kv_len", "none", "none"))
     ctx.state_out[skey] = {"k": kc, "v": vc, "pos": pc}
     qpos = jnp.broadcast_to(ctx.cache_index, (B, 1)).astype(jnp.int32)
-    if backend in ("pallas", "pallas_interpret"):
-        from repro.kernels import ops as kops
-        return kops.decode_attention(
-            q, kc, vc, pc, qpos, window=window, softcap=softcap,
-            interpret=backend == "pallas_interpret",
-            tile=ctx.plan.tiles.get("decode_attention"))
+    kern = plan_kernel(ctx.plan, "decode_attention")
+    if kern is not None:
+        fn, interpret = kern
+        return fn(q, kc, vc, pc, qpos, window=window, softcap=softcap,
+                  interpret=interpret,
+                  tile=ctx.plan.tiles.get("decode_attention"))
     return _sdpa(ctx, q, kc, vc, qpos, pc, causal=True, window=window,
                  softcap=softcap)
 
@@ -422,12 +423,10 @@ def op_rg_lru(ctx: Ctx, op, p, x):
         return h[:, None, :].astype(ctx.compute_dtype)
     # linear recurrence over the sequence: Pallas scan kernel (state resident
     # in VMEM) on the kernel backends, associative scan on the reference path
-    backend = ctx.plan.flow.kernel_backend
-    if backend in ("pallas", "pallas_interpret"):
-        from repro.kernels.lru_scan import lru_scan
-        h = lru_scan(a, gated,
-                     interpret=backend == "pallas_interpret").astype(
-                         jnp.float32)
+    kern = plan_kernel(ctx.plan, "rg_lru")
+    if kern is not None:
+        fn, interpret = kern
+        h = fn(a, gated, interpret=interpret).astype(jnp.float32)
     else:
         def comb(u, w_):
             (a1, b1), (a2, b2) = u, w_
@@ -736,11 +735,10 @@ def _moe_shard_map(ctx: Ctx, op, p, x):
     if has_shared:
         operands += [p["ws_gate"], p["ws_up"], p["ws_down"]]
         in_specs += [P(None, tpn), P(None, tpn), P(tpn, None)]
-    f = jax.shard_map(body, mesh=rules.mesh,
-                      in_specs=tuple(in_specs),
-                      out_specs=(P(dp_ent, None, None), P()),
-                      axis_names=set(rules.mesh.axis_names),
-                      check_vma=False)
+    from repro.core.compat import shard_map
+    f = shard_map(body, rules.mesh, tuple(in_specs),
+                  (P(dp_ent, None, None), P()),
+                  axis_names=set(rules.mesh.axis_names))
     y, aux = f(*operands)
     if ctx.mode == "train":
         ctx.add_aux("moe_aux", aux)
@@ -809,13 +807,11 @@ def op_image_in(ctx: Ctx, op, p, h):
 
 def _conv_backend(ctx: Ctx, x, w, *, stride, padding, groups=1,
                   bn=None, act=None):
-    backend = ctx.plan.flow.kernel_backend
-    if backend in ("pallas", "pallas_interpret") and groups == 1:
-        from repro.kernels import ops as kops
-        return kops.conv2d_fused(x, w, stride=stride, padding=padding,
-                                 bn=bn, act=act,
-                                 interpret=backend == "pallas_interpret",
-                                 tile=ctx.plan.tiles.get("conv2d"))
+    kern = plan_kernel(ctx.plan, "conv2d", groups=groups)
+    if kern is not None:
+        fn, interpret = kern
+        return fn(x, w, stride=stride, padding=padding, bn=bn, act=act,
+                  interpret=interpret, tile=ctx.plan.tiles.get("conv2d"))
     dt = ctx.compute_dtype
     # mixed-precision conv transpose rules reject bf16 operands with an f32
     # preferred type; the reference path upcasts instead (the Pallas kernel

@@ -1,4 +1,5 @@
-from repro.core.passes import caching, folding, fusion, precision, streaming, tiling  # noqa: F401
+from repro.core.passes import (  # noqa: F401
+    backends, caching, folding, fusion, precision, streaming, tiling)
 
 
 def default_passes():
@@ -6,4 +7,5 @@ def default_passes():
     from repro.core.passmanager import GraphBuildPass
     return [GraphBuildPass(), fusion.FusionPass(), streaming.StreamingPass(),
             folding.FoldingPass(), tiling.TilingPass(),
-            precision.PrecisionPass(), caching.CachingPass()]
+            precision.PrecisionPass(), caching.CachingPass(),
+            backends.KernelSelectPass()]

@@ -6,6 +6,7 @@ entry point every launcher/test uses.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -27,6 +28,8 @@ class ExecutionPlan:
     prec: precision.PrecisionPlan
     cache: caching.CachingPlan
     rules: Optional[Any] = None      # ShardingRules (distributed runtime)
+    # per-op kernel-backend resolution (KernelSelectPass / KernelRegistry)
+    kernels: Dict[str, str] = field(default_factory=dict)
     # pass-pipeline instrumentation (PassManager)
     pass_stats: Dict[str, Dict[str, Any]] = field(default_factory=dict)
     pass_timings_ms: Dict[str, float] = field(default_factory=dict)
@@ -68,6 +71,13 @@ class ExecutionPlan:
             ", ".join(f"{u.reps}x{u.period}" for u in folded) + ")",
             f"  tiles: {self.tiles}",
         ]
+        if self.kernels:
+            from repro.kernels.registry import REGISTRY
+            accel = [op for op in REGISTRY.accelerated_ops()
+                     if op in self.kernels]
+            lines.append(
+                f"  kernels: backend={self.flow.kernel_backend} " +
+                " ".join(f"{op}={self.kernels[op]}" for op in accel))
         if stats:
             lines.append("  pass stats:")
             for name in self.pass_stats:
@@ -77,11 +87,39 @@ class ExecutionPlan:
         return "\n".join(lines)
 
 
-def build_plan(cfg: ModelConfig, flow: FlowConfig, shape: ShapeConfig,
-               mesh_axes: Tuple[str, ...] = (), rules=None,
-               graph: Optional[Graph] = None) -> ExecutionPlan:
+def _build_plan(cfg: ModelConfig, flow: FlowConfig, shape: ShapeConfig,
+                mesh_axes: Tuple[str, ...] = (), rules=None,
+                graph: Optional[Graph] = None) -> ExecutionPlan:
     """Run the default pass pipeline: build graph -> LF fusion -> CH/CE
-    streaming -> PK folding -> LU/LT tiling -> OF precision -> CW caching."""
+    streaming -> PK folding -> LU/LT tiling -> OF precision -> CW caching ->
+    kernel-backend selection.  Internal entry point — the public facade is
+    :func:`repro.flow.compile`."""
     from repro.core.passmanager import PassManager
     return PassManager.default_pipeline().run(
         cfg, flow, shape, mesh_axes=mesh_axes, rules=rules, graph=graph)
+
+
+_DEPRECATION_WARNED = False
+
+
+def _warn_deprecated(name: str) -> None:
+    """One DeprecationWarning per process for the whole legacy surface."""
+    global _DEPRECATION_WARNED
+    if _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED = True
+    warnings.warn(
+        f"{name} is a deprecated entry point; use repro.flow.compile(...) "
+        "(returns a CompiledModel owning the plan and the jitted "
+        "train/prefill/decode/generate callables)",
+        DeprecationWarning, stacklevel=3)
+
+
+def build_plan(cfg: ModelConfig, flow: FlowConfig, shape: ShapeConfig,
+               mesh_axes: Tuple[str, ...] = (), rules=None,
+               graph: Optional[Graph] = None) -> ExecutionPlan:
+    """Deprecated shim over the default pipeline — use
+    :func:`repro.flow.compile`.  Produces byte-identical plans."""
+    _warn_deprecated("repro.core.plan.build_plan")
+    return _build_plan(cfg, flow, shape, mesh_axes=mesh_axes, rules=rules,
+                       graph=graph)

@@ -122,19 +122,23 @@ def make_pipeline_loss(plan: ExecutionPlan, mesh, n_microbatches: int,
                              lambda: embed(eparams, toks).astype(dt),
                              lambda: h_in)
             h_out = run_stage_layers(gparams, x)
+            # the accumulator stays rank-1: scalar residuals of this scan
+            # trip a shape-bookkeeping bug in the pre-0.6 shard_map transpose
             lmb = jax.lax.cond(
                 jnp.logical_and(ax == n_stages - 1,
                                 jnp.logical_and(mb >= 0, mb < nmb)),
-                lambda: head_loss(hparams, tied, h_out, labs),
-                lambda: 0.0)
+                lambda: head_loss(hparams, tied, h_out, labs).reshape(1),
+                lambda: jnp.zeros((1,), jnp.float32))
             return (h_out, loss_acc + lmb), None
 
         h0 = jnp.zeros((B, S, d), dt)
-        (_, loss), _ = jax.lax.scan(step, (h0, 0.0),
+        (_, loss), _ = jax.lax.scan(step, (h0, jnp.zeros((1,), jnp.float32)),
                                     jnp.arange(T, dtype=jnp.int32))
-        # only the last stage holds the loss; share it
-        loss = jax.lax.psum(loss, pp_axis) / nmb
-        return loss
+        # per-stage partial loss (non-zero on the last stage only), returned
+        # sharded over pp_axis and summed outside the manual region — a
+        # replicated scalar output would need an in-region psum whose
+        # transpose the pre-0.6 shard_map rejects under check_rep=False
+        return loss / nmb
 
     # shard_map wiring: stacked layer params split over pod; rest replicated
     def pspec_for(path_key: str):
@@ -151,9 +155,9 @@ def make_pipeline_loss(plan: ExecutionPlan, mesh, n_microbatches: int,
         assert B % nmb == 0
         tmb = tokens.reshape(nmb, B // nmb, -1)
         lmb = labels.reshape(nmb, B // nmb, -1)
-        f = jax.shard_map(pipe, mesh=mesh, in_specs=in_specs,
-                          out_specs=P(), axis_names={pp_axis},
-                          check_vma=False)
-        return f(params, tmb, lmb)
+        from repro.core.compat import shard_map
+        f = shard_map(pipe, mesh, in_specs, P(pp_axis),
+                      axis_names={pp_axis})
+        return jnp.sum(f(params, tmb, lmb))
 
     return loss_fn

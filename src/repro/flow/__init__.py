@@ -1,0 +1,327 @@
+"""repro.flow — the single public entry point of the compilation flow.
+
+The paper's contract is *frozen model in, optimized accelerator out*; this
+package is that front door for the repro stack::
+
+    from repro import flow
+
+    cm = flow.compile("llama3.2-1b", "decode_32k", smoke=True)
+    params = cm.init_params(jax.random.key(0))
+    tokens, state = cm.generate(params, {"tokens": prompt}, steps=16)
+    print(cm.describe())
+
+``compile()`` runs the pass pipeline (optionally the design-space explorer)
+and returns a :class:`CompiledModel` that owns the :class:`ExecutionPlan`,
+the jitted ``train_step`` / ``prefill`` / ``decode`` / ``generate``
+callables, ``init_params`` / ``init_state``, per-stage compile stats, and a
+``describe()`` mirroring the paper's flow report.  Kernel-backend selection
+happens behind it through the :class:`~repro.kernels.registry.KernelRegistry`
+(``backend="auto"`` resolves per op: Pallas where the platform compiles it
+natively, the reference path elsewhere).
+
+Everything downstream (``launch/*``, ``serving.engine.Engine``,
+``examples/*``) consumes a ``CompiledModel``; ``build_plan`` / ``make_apply``
+remain as deprecated shims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, get_smoke
+from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
+from repro.core import lowering
+from repro.core.plan import ExecutionPlan, _build_plan
+
+__all__ = ["compile", "CompiledModel"]
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+class CompiledModel:
+    """The product of :func:`compile`: an ExecutionPlan plus the executable
+    surface lowered from it.
+
+    Jitted stages (``prefill``/``decode``/``train_step``/``generate_fori``)
+    are built lazily and cached; the wall-clock of each stage's first
+    invocation (trace + XLA compile) is recorded in ``stats["stages"]`` —
+    the per-stage analogue of the paper's per-optimization build report.
+    """
+
+    def __init__(self, plan: ExecutionPlan, *, mesh=None,
+                 explore_result=None, build_s: float = 0.0):
+        self.plan = plan
+        self.cfg: ModelConfig = plan.cfg
+        self.flow: FlowConfig = plan.flow
+        self.shape: ShapeConfig = plan.shape
+        self.mesh = mesh
+        self.rules = plan.rules
+        self.explore_result = explore_result
+        self.stats: Dict[str, Any] = {
+            "plan_build_s": round(build_s, 4),
+            "pass_timings_ms": dict(plan.pass_timings_ms),
+            "stages": {},
+        }
+        self._apply = None
+        self._loss_fn = None
+        self._stages: Dict[str, Callable] = {}
+        self._train_steps: Dict[Tuple[int, int], Callable] = {}
+
+    @classmethod
+    def from_plan(cls, plan: ExecutionPlan, mesh=None) -> "CompiledModel":
+        """Wrap an already-built plan (legacy-path interop)."""
+        return cls(plan, mesh=mesh)
+
+    # -- lowering primitives -------------------------------------------------
+    @property
+    def apply(self) -> Callable:
+        """apply(params, batch, state=None, cache_index=None, mode=...) ->
+        (out, new_state, aux) — the un-jitted lowered program."""
+        if self._apply is None:
+            self._apply = lowering._make_apply(self.plan)
+        return self._apply
+
+    @property
+    def loss_fn(self) -> Callable:
+        if self._loss_fn is None:
+            self._loss_fn = lowering.make_loss_fn(self.plan)
+        return self._loss_fn
+
+    def init_params(self, rng):
+        return lowering.init_params(self.plan, rng)
+
+    def init_state(self, batch_size: int, **kw):
+        return lowering.init_state(self.plan, batch_size, **kw)
+
+    def param_shapes(self):
+        return lowering.param_shapes(self.plan)
+
+    # -- jitted stages -------------------------------------------------------
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else _nullcontext()
+
+    def _wrap_timed(self, name: str, jfn: Callable) -> Callable:
+        """Record the wall-clock of the stage's first call (trace + XLA
+        compile) into ``stats['stages']``."""
+        def fn(*args, **kw):
+            st = self.stats["stages"]
+            if name not in st:
+                t0 = time.perf_counter()
+                out = jfn(*args, **kw)
+                jax.block_until_ready(out)
+                st[name] = {"first_call_s":
+                            round(time.perf_counter() - t0, 4)}
+                return out
+            return jfn(*args, **kw)
+        return fn
+
+    def _stage(self, name: str, build: Callable[[], Callable]) -> Callable:
+        fn = self._stages.get(name)
+        if fn is None:
+            fn = self._wrap_timed(name, build())
+            self._stages[name] = fn
+        return fn
+
+    @property
+    def prefill(self) -> Callable:
+        """Jitted prefill(params, batch) -> (logits, state, aux)."""
+        def build():
+            apply = self.apply
+            with self._mesh_ctx():
+                return jax.jit(lambda p, b: apply(p, b, mode="prefill"))
+        return self._stage("prefill", build)
+
+    @property
+    def decode(self) -> Callable:
+        """Jitted decode(params, batch, state, cache_index) ->
+        (logits, new_state, aux); the state argument is donated."""
+        def build():
+            apply = self.apply
+            with self._mesh_ctx():
+                return jax.jit(
+                    lambda p, b, st, i: apply(p, b, state=st, cache_index=i,
+                                              mode="decode"),
+                    donate_argnums=(2,))
+        return self._stage("decode", build)
+
+    def train_step(self, opt, microbatches: Optional[int] = None) -> Callable:
+        """Jitted, donated train step for ``opt``:
+        step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+        mb = microbatches if microbatches is not None \
+            else max(self.flow.microbatches, 1)
+        key = (id(opt), mb)
+        fn = self._train_steps.get(key)
+        if fn is None:
+            from repro.train.trainer import make_train_step
+            raw = make_train_step(self.plan, opt, microbatches=mb)
+            with self._mesh_ctx():
+                jfn = jax.jit(raw, donate_argnums=(0, 1))
+            fn = self._wrap_timed(f"train_step[mb={mb}]", jfn)
+            self._train_steps[key] = fn
+        return fn
+
+    # -- generation ----------------------------------------------------------
+    def _sample(self, logits, rng, temperature: float):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, params, batch: Dict[str, Any], steps: int, *,
+                 temperature: float = 0.0, seed: int = 0
+                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Prefill the prompt batch, then decode ``steps`` tokens through the
+        jitted donated decode stage (host-side sampling loop)."""
+        S = batch["tokens"].shape[1]
+        logits, state, _ = self.prefill(params, batch)
+        rng = jax.random.key(seed)
+        tok = self._sample(logits[:, -1], rng, temperature)
+        out = [tok]
+        for t in range(steps - 1):
+            rng, k = jax.random.split(rng)
+            lg, state, _ = self.decode(params, {"tokens": tok[:, None]},
+                                       state, jnp.int32(S + t))
+            tok = self._sample(lg[:, -1], k, temperature)
+            out.append(tok)
+        return jnp.stack(out, axis=1), state
+
+    def generate_fori(self, params, batch: Dict[str, Any],
+                      steps: int) -> jnp.ndarray:
+        """Fully on-device greedy generation: prefill plus the whole decode
+        loop as one jitted program (the paper's autorun analogue)."""
+        S = batch["tokens"].shape[1]
+        apply = self.apply
+
+        def build():
+            def run(params, batch):
+                logits, state, _ = apply(params, batch, mode="prefill")
+                tok0 = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                B = tok0.shape[0]
+                toks = jnp.zeros((B, steps), jnp.int32)
+                toks = toks.at[:, 0].set(tok0)
+
+                def body(t, carry):
+                    toks, state = carry
+                    cur = jax.lax.dynamic_slice_in_dim(toks, t, 1, axis=1)
+                    lg, state, _ = apply(params, {"tokens": cur}, state=state,
+                                         cache_index=(S + t).astype(jnp.int32),
+                                         mode="decode")
+                    nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+                    toks = jax.lax.dynamic_update_slice_in_dim(
+                        toks, nxt[:, None], t + 1, axis=1)
+                    return toks, state
+
+                toks, _ = jax.lax.fori_loop(0, steps - 1, body, (toks, state))
+                return toks
+
+            with self._mesh_ctx():
+                return jax.jit(run)
+
+        return self._stage(f"generate_fori[{S}+{steps}]", build)(params, batch)
+
+    # -- reporting -----------------------------------------------------------
+    def describe(self, stats: bool = False) -> str:
+        """The flow report: plan summary (passes, units, tiles, kernel
+        backends), DSE outcome when autotuned, and per-stage compile stats."""
+        lines = [self.plan.describe(stats=stats)]
+        if self.explore_result is not None:
+            er = self.explore_result
+            lines.append(f"  dse: best=[{er.best.knob_str()}] "
+                         f"enumerated={er.n_enumerated} "
+                         f"validated={len(er.validated)}")
+        if stats and self.stats["stages"]:
+            parts = [f"{k}={v['first_call_s']}s"
+                     for k, v in self.stats["stages"].items()]
+            lines.append("  stages: " + " ".join(parts))
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return (f"<CompiledModel {self.cfg.name} x {self.shape.name} "
+                f"backend={self.flow.kernel_backend}>")
+
+
+def _resolve_cfg(arch_or_cfg: Union[str, ModelConfig],
+                 smoke: bool) -> ModelConfig:
+    if isinstance(arch_or_cfg, str):
+        return get_smoke(arch_or_cfg) if smoke else get_config(arch_or_cfg)
+    return arch_or_cfg
+
+
+def _resolve_shape(shape: Union[str, ShapeConfig]) -> ShapeConfig:
+    if isinstance(shape, str):
+        try:
+            return SHAPES[shape]
+        except KeyError:
+            raise KeyError(f"unknown shape {shape!r}; known: "
+                           f"{list(SHAPES)}") from None
+    return shape
+
+
+def _rules_for(mesh):
+    from repro.distributed.sharding import ShardingRules
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return ShardingRules(mesh, dp=dp, tp="model")
+
+
+def compile(arch_or_cfg: Union[str, ModelConfig],
+            shape: Union[str, ShapeConfig],
+            flow: Optional[FlowConfig] = None, *,
+            backend: str = "auto",
+            autotune: bool = False,
+            mesh=None,
+            smoke: bool = False) -> CompiledModel:
+    """Compile one (model, shape) cell through the whole flow.
+
+    Args:
+      arch_or_cfg: registry arch name (``"llama3.2-1b"``) or a ModelConfig.
+      shape: shape-cell name from ``repro.configs.SHAPES`` or a ShapeConfig.
+      flow: FlowConfig knobs; defaults to ``FlowConfig(mode="folded")``.
+      backend: kernel-backend policy (``auto`` | ``reference`` | ``pallas`` |
+        ``pallas_interpret``).  A non-``auto`` value overrides the flow's
+        ``kernel_backend``; the default keeps the flow's own setting.
+      autotune: run the design-space explorer (estimator-pruned,
+        compile-validated; results are cached per (cfg, shape, flow)
+        fingerprint) and compile the winning flow.
+      mesh: a jax Mesh for the distributed runtime; sharding rules are
+        derived from its axis names (``model`` TP, ``data``/``pod`` DP).
+      smoke: with a string arch, select the reduced (CPU-runnable) config.
+    """
+    cfg = _resolve_cfg(arch_or_cfg, smoke)
+    shape = _resolve_shape(shape)
+    flow = flow if flow is not None else FlowConfig(mode="folded")
+    if backend != "auto" and backend != flow.kernel_backend:
+        flow = dataclasses.replace(flow, kernel_backend=backend)
+
+    explore_result = None
+    t0 = time.perf_counter()
+    if autotune:
+        from repro.core import dse
+        n_dev = int(mesh.devices.size) if mesh is not None else 1
+        explore_result = dse.explore(
+            cfg, shape, flow, devices=n_dev,
+            validator=dse.compile_validator(cfg, shape))
+        flow = explore_result.best.flow
+
+    rules = None
+    mesh_axes: Tuple[str, ...] = ()
+    if mesh is not None:
+        rules = _rules_for(mesh)
+        mesh_axes = tuple(mesh.axis_names)
+
+    if explore_result is not None and mesh is None:
+        plan = explore_result.plan          # already built for the best flow
+    else:
+        plan = _build_plan(cfg, flow, shape, mesh_axes=mesh_axes, rules=rules)
+    build_s = time.perf_counter() - t0
+    return CompiledModel(plan, mesh=mesh, explore_result=explore_result,
+                         build_s=build_s)

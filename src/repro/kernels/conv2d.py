@@ -1,12 +1,17 @@
 """Direct 2-D convolution Pallas kernel with fused BN/activation epilogue.
 
-The paper's workhorse op.  Grid: (batch, C_out tiles).  Each step keeps the
-full (padded) input feature map of one image in VMEM — CNN maps at these
-sizes are far below the VMEM budget — and contracts the kh×kw taps as
-shifted (H·W, C_in)×(C_in, bc) matmuls on the MXU (the TPU-native analogue
+The paper's workhorse op.  Grid: (batch, C_out tiles, H_out row blocks).
+Each step keeps the full (padded) input feature map of one image in VMEM —
+CNN maps at these sizes are far below the VMEM budget — and contracts the
+kh×kw taps for one block of ``block_h`` output rows as shifted
+(block_h·W_out, C_in)×(C_in, bc) matmuls on the MXU (the TPU-native analogue
 of unrolling the filter loops: taps become statically unrolled matmuls, not
 scalar MACCs).  The inference-folded batch-norm and activation apply in VMEM
 before the single write-back (LF + CW).
+
+The tiling pass hands ``(block_h, block_c)`` — the LU/LT row/channel tile
+pair; both components are honoured (rule 2: blocks divide the output dims,
+falling back to the largest divisor).
 """
 from __future__ import annotations
 
@@ -19,22 +24,23 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
-            ho: int, wo: int, act: Optional[str], has_bn: bool):
+            bh: int, wo: int, act: Optional[str], has_bn: bool):
     from repro.core.ops_impl import _act
     if has_bn:
         scale_ref, bias_ref, mean_ref, var_ref = rest[:4]
     o_ref = rest[-1]
+    r0 = pl.program_id(2) * bh * stride         # first input row of the block
     x = x_ref[0].astype(jnp.float32)            # (Hp, Wp, CI)
     w = w_ref[...].astype(jnp.float32)          # (kh, kw, CI, bc)
     ci = x.shape[-1]
     bc = w.shape[-1]
-    acc = jnp.zeros((ho * wo, bc), jnp.float32)
+    acc = jnp.zeros((bh * wo, bc), jnp.float32)
     for dh in range(kh):
         for dw in range(kw):
-            xs = jax.lax.slice(
-                x, (dh, dw, 0),
-                (dh + (ho - 1) * stride + 1, dw + (wo - 1) * stride + 1, ci),
-                (stride, stride, 1)).reshape(ho * wo, ci)
+            sub = jax.lax.dynamic_slice(
+                x, (r0 + dh, dw, 0),
+                ((bh - 1) * stride + 1, (wo - 1) * stride + 1, ci))
+            xs = sub[::stride, ::stride, :].reshape(bh * wo, ci)
             acc += jnp.dot(xs, w[dh, dw], preferred_element_type=jnp.float32)
     if has_bn:
         inv = jax.lax.rsqrt(var_ref[...].astype(jnp.float32) + 1e-5)
@@ -42,12 +48,23 @@ def _kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
                + bias_ref[...])
     if act:
         acc = _act(acc, act)
-    o_ref[0] = acc.reshape(ho, wo, bc).astype(o_ref.dtype)
+    o_ref[0] = acc.reshape(bh, wo, bc).astype(o_ref.dtype)
+
+
+def _fit_block(n: int, target: Optional[int]) -> int:
+    """Largest divisor of ``n`` <= target (rule 2: even division)."""
+    if target is None or target >= n:
+        return n
+    b = max(min(target, n), 1)
+    while n % b:
+        b -= 1
+    return b
 
 
 def conv2d_fused(x: jax.Array, w: jax.Array, *, stride: int = 1,
                  padding: str = "SAME", bn=None, act: Optional[str] = None,
-                 block_c: int = 128, interpret: bool = False) -> jax.Array:
+                 block_c: int = 128, block_h: Optional[int] = None,
+                 interpret: bool = False) -> jax.Array:
     """x: (N, H, W, CI) NHWC; w: (kh, kw, CI, CO) HWIO."""
     N, H, W, CI = x.shape
     kh, kw, _, CO = w.shape
@@ -61,22 +78,22 @@ def conv2d_fused(x: jax.Array, w: jax.Array, *, stride: int = 1,
     else:
         ho = (H - kh) // stride + 1
         wo = (W - kw) // stride + 1
-    bc = min(block_c, CO)
-    while CO % bc:
-        bc //= 2
-    bc = max(bc, 1)
-    grid = (N, CO // bc)
-    in_specs = [pl.BlockSpec((1,) + x.shape[1:], lambda n, j: (n, 0, 0, 0)),
-                pl.BlockSpec((kh, kw, CI, bc), lambda n, j: (0, 0, 0, j))]
+    # row blocks index the input via dynamic_slice; both paddings guarantee
+    # x.shape[1] >= (ho-1)*stride + kh, so every block's extent is in range
+    bc = _fit_block(CO, min(block_c, CO))
+    bh = _fit_block(ho, block_h)
+    grid = (N, CO // bc, ho // bh)
+    in_specs = [pl.BlockSpec((1,) + x.shape[1:], lambda n, j, i: (n, 0, 0, 0)),
+                pl.BlockSpec((kh, kw, CI, bc), lambda n, j, i: (0, 0, 0, j))]
     operands = [x, w]
     if bn is not None:
         for t in bn:
-            in_specs.append(pl.BlockSpec((bc,), lambda n, j: (j,)))
+            in_specs.append(pl.BlockSpec((bc,), lambda n, j, i: (j,)))
             operands.append(t.astype(jnp.float32))
-    kern = functools.partial(_kernel, kh=kh, kw=kw, stride=stride, ho=ho,
+    kern = functools.partial(_kernel, kh=kh, kw=kw, stride=stride, bh=bh,
                              wo=wo, act=act, has_bn=bn is not None)
     return pl.pallas_call(
         kern, grid=grid, in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, ho, wo, bc), lambda n, j: (n, 0, 0, j)),
+        out_specs=pl.BlockSpec((1, bh, wo, bc), lambda n, j, i: (n, i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((N, ho, wo, CO), x.dtype),
         interpret=interpret)(*operands)

@@ -41,6 +41,11 @@ def decode_attention(q, kc, vc, pos, qpos, *, window=None, softcap=None,
 
 def conv2d_fused(x, w, *, stride=1, padding="SAME", bn=None, act=None,
                  tile=None, interpret=False):
-    block_c = tile[1] if isinstance(tile, tuple) else (tile or 128)
+    # the tiling pass hands (block_h, block_c); a bare int means block_c only
+    if isinstance(tile, tuple):
+        block_h, block_c = tile
+    else:
+        block_h, block_c = None, (tile or 128)
     return _cv.conv2d_fused(x, w, stride=stride, padding=padding, bn=bn,
-                            act=act, block_c=block_c, interpret=interpret)
+                            act=act, block_c=block_c, block_h=block_h,
+                            interpret=interpret)

@@ -1,0 +1,215 @@
+"""KernelRegistry — pluggable per-op kernel-backend selection.
+
+The paper's flow emits one accelerator per network; end-to-end compilers that
+followed it (DNNVM's heterogeneous ISA mapping, the FPGA-CNN survey's
+backend taxonomy) put a *registry* between the op layer and the kernel
+implementations: each op may have several implementations, keyed by backend,
+each guarded by a capability predicate, and the flow resolves the pair at
+plan-build time.
+
+This module is that seam for the repro stack:
+
+* implementations register under ``(op, backend)`` with backends drawn from
+  ``{"ref", "pallas"}`` — ``pallas_interpret`` is the Pallas implementation
+  executed through the interpreter (CPU validation), not a separate entry;
+* every op in :data:`repro.core.ops_impl.OPS` implicitly owns a ``ref``
+  entry (the pure-XLA implementation *is* the reference backend);
+* ``resolve(op, "auto")`` picks per op: Pallas where a Pallas implementation
+  exists and the platform runs Mosaic (TPU), the reference path elsewhere;
+* the resolution for a whole plan (:meth:`KernelRegistry.resolve_all`) is
+  recorded on the ``ExecutionPlan`` by the ``kernels`` pass, shows up in
+  ``plan.describe()`` and is a DSE tunable (``FlowConfig.kernel_backend``).
+
+Call-site capability predicates (dtype/rank/attribute constraints that are
+only known with concrete operands) are checked at dispatch time by
+:func:`plan_kernel`; a failing predicate falls back to the reference path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+BACKENDS = ("ref", "pallas", "pallas_interpret", "auto")
+
+_ALIASES = {"reference": "ref", "ref": "ref", "pallas": "pallas",
+            "pallas_interpret": "pallas_interpret", "auto": "auto"}
+
+
+def canon_backend(name: str) -> str:
+    """Canonical backend name (``reference`` → ``ref``)."""
+    try:
+        return _ALIASES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; expected one of "
+            f"{sorted(set(_ALIASES))}") from None
+
+
+def _default_platform() -> str:
+    import jax
+    return jax.default_backend()
+
+
+@dataclass(frozen=True)
+class KernelImpl:
+    """One registered kernel implementation.
+
+    ``supports`` is the call-site capability predicate: it receives the
+    keyword facts the op layer passes to :func:`plan_kernel` (operand arrays,
+    attrs like ``groups``/``window``) and returns whether this implementation
+    can handle them.  ``platforms`` gates plan-time resolution (a Pallas
+    kernel compiled through Mosaic is TPU-only; in interpret mode it runs
+    anywhere)."""
+    op: str
+    backend: str
+    fn: Callable
+    supports: Callable[..., bool] = field(default=lambda **kw: True)
+    platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
+
+    def __repr__(self) -> str:
+        return f"<KernelImpl {self.op}/{self.backend}>"
+
+
+class KernelRegistry:
+    """Maps ``(op, backend)`` → :class:`KernelImpl` and resolves backends."""
+
+    def __init__(self):
+        self._impls: Dict[Tuple[str, str], KernelImpl] = {}
+
+    # -- registration -------------------------------------------------------
+    def register(self, op: str, backend: str, fn: Optional[Callable] = None,
+                 *, supports: Optional[Callable[..., bool]] = None,
+                 platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")):
+        """Register ``fn`` as the ``backend`` implementation of ``op``.
+        Usable directly or as a decorator."""
+        backend = canon_backend(backend)
+        if backend == "auto":
+            raise ValueError("'auto' is a resolution policy, not a backend")
+
+        def _add(f: Callable) -> Callable:
+            self._impls[(op, backend)] = KernelImpl(
+                op, backend, f, supports or (lambda **kw: True), platforms)
+            return f
+
+        return _add if fn is None else _add(fn)
+
+    # -- lookup -------------------------------------------------------------
+    def _ref_ops(self) -> Dict[str, Callable]:
+        from repro.core.ops_impl import OPS
+        return OPS
+
+    def ops(self) -> Tuple[str, ...]:
+        """All ops the registry can resolve (reference table ∪ registered)."""
+        names = set(self._ref_ops()) | {op for op, _ in self._impls}
+        return tuple(sorted(names))
+
+    def accelerated_ops(self) -> Tuple[str, ...]:
+        """Ops with at least one non-reference implementation."""
+        return tuple(sorted({op for (op, b) in self._impls if b != "ref"}))
+
+    def has(self, op: str, backend: str) -> bool:
+        backend = canon_backend(backend)
+        if backend == "pallas_interpret":   # interpret reuses the pallas impl
+            backend = "pallas"
+        if backend == "ref":
+            return (op, "ref") in self._impls or op in self._ref_ops()
+        return (op, backend) in self._impls
+
+    def get(self, op: str, backend: str) -> KernelImpl:
+        backend = canon_backend(backend)
+        key = "pallas" if backend == "pallas_interpret" else backend
+        impl = self._impls.get((op, key))
+        if impl is None and key == "ref":
+            fn = self._ref_ops().get(op)
+            if fn is not None:
+                impl = KernelImpl(op, "ref", fn)
+        if impl is None:
+            raise KeyError(f"no {backend!r} implementation registered for "
+                           f"op {op!r} (have: {self.backends(op)})")
+        return impl
+
+    def backends(self, op: str) -> Tuple[str, ...]:
+        out = {b for (o, b) in self._impls if o == op}
+        if op in self._ref_ops():
+            out.add("ref")
+        return tuple(sorted(out))
+
+    # -- resolution ---------------------------------------------------------
+    def resolve(self, op: str, backend: str = "auto",
+                platform: Optional[str] = None) -> str:
+        """Plan-time backend choice for one op.
+
+        ``auto`` → Pallas where an implementation exists and the platform
+        compiles it natively (TPU), reference elsewhere.  An explicit Pallas
+        request degrades to ``ref`` for ops with no Pallas implementation
+        (e.g. ``norm``), mirroring the old in-op string checks."""
+        backend = canon_backend(backend)
+        platform = platform if platform is not None else _default_platform()
+        if backend == "auto":
+            if (op, "pallas") in self._impls and platform == "tpu" \
+                    and platform in self._impls[(op, "pallas")].platforms:
+                return "pallas"
+            return "ref"
+        if backend in ("pallas", "pallas_interpret"):
+            return backend if (op, "pallas") in self._impls else "ref"
+        return "ref"
+
+    def resolve_all(self, backend: str = "auto",
+                    platform: Optional[str] = None) -> Dict[str, str]:
+        """Resolution table for every known op (recorded on the plan)."""
+        platform = platform if platform is not None else _default_platform()
+        return {op: self.resolve(op, backend, platform) for op in self.ops()}
+
+
+REGISTRY = KernelRegistry()
+
+
+def plan_kernel(plan, op: str, **facts) -> Optional[Tuple[Callable, bool]]:
+    """Dispatch helper for the op layer.
+
+    Returns ``(fn, interpret)`` when the plan resolves ``op`` to a Pallas
+    implementation whose capability predicate accepts the call-site
+    ``facts``; ``None`` means take the reference path.  Plans built by
+    pipelines without the ``kernels`` pass fall back to resolving the flow's
+    ``kernel_backend`` on the fly."""
+    resolved = plan.kernels.get(op) if plan.kernels else None
+    if resolved is None:
+        resolved = REGISTRY.resolve(op, plan.flow.kernel_backend)
+    if resolved not in ("pallas", "pallas_interpret"):
+        return None
+    impl = REGISTRY.get(op, "pallas")
+    if not impl.supports(**facts):
+        return None
+    return impl.fn, resolved == "pallas_interpret"
+
+
+# ---------------------------------------------------------------------------
+# Built-in Pallas registrations (the kernels/ package)
+# ---------------------------------------------------------------------------
+
+def _register_builtin():
+    from repro.kernels import ops as kops
+    from repro.kernels.lru_scan import lru_scan
+
+    REGISTRY.register(
+        "matmul", "pallas", kops.matmul_fused,
+        supports=lambda x=None, w=None, **kw:
+            x is not None and w is not None and x.ndim >= 2 and w.ndim == 2)
+    REGISTRY.register(
+        "glu_matmul", "pallas", kops.matmul_fused,
+        supports=lambda x=None, w=None, **kw:
+            x is not None and w is not None and x.ndim >= 2 and w.ndim == 2)
+    REGISTRY.register(
+        "attention", "pallas", kops.flash_attention,
+        # window == 0 is a degenerate cell some configs use to disable the
+        # flash path; cross-attention caches K/V outside the kernel
+        supports=lambda window=None, cross=False, **kw:
+            window != 0 and not cross)
+    REGISTRY.register("decode_attention", "pallas", kops.decode_attention)
+    REGISTRY.register(
+        "conv2d", "pallas", kops.conv2d_fused,
+        supports=lambda groups=1, **kw: groups == 1)
+    REGISTRY.register("rg_lru", "pallas", lru_scan)
+
+
+_register_builtin()

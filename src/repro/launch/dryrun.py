@@ -21,11 +21,10 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import flow as rflow
 from repro.configs import (SHAPES, cells, get_config)
 from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
 from repro.core import lowering
-from repro.core.plan import ExecutionPlan, build_plan
-from repro.distributed.sharding import ShardingRules
 from repro.launch.mesh import make_production_mesh
 from repro.optim.adamw import AdamW
 from repro.train.trainer import make_train_step
@@ -47,12 +46,10 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     shape = SHAPES[shape_name]
     if mesh is None:
         mesh = make_production_mesh(multi_pod=multi_pod)
-    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    rules = ShardingRules(mesh, dp=dp, tp="model")
     flow = flow or FlowConfig(mode="folded")
-    plan = build_plan(cfg, flow, shape, mesh_axes=tuple(mesh.axis_names),
-                      rules=rules)
-    pshapes = lowering.param_shapes(plan)
+    cm = rflow.compile(cfg, shape, flow, mesh=mesh)
+    plan, rules = cm.plan, cm.rules
+    pshapes = cm.param_shapes()
     psh = rules.params_shardings(plan)
     bspecs = input_specs(cfg, shape)
     bsh = rules.batch_sharding(bspecs)
@@ -75,7 +72,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         donate = (0, 1)
         fn = step
     elif shape.kind == "prefill":
-        apply = lowering.make_apply(plan)
+        apply = cm.apply
         ssh = lowering.state_shardings(plan, B, rules)
         def fn(params, batch):
             logits, state, _ = apply(params, batch, mode="prefill")
@@ -85,8 +82,8 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         out_shardings = (logits_sh, ssh)
         donate = ()
     else:  # decode
-        apply = lowering.make_apply(plan)
-        state_abs = lowering.init_state(plan, B, abstract=True)
+        apply = cm.apply
+        state_abs = cm.init_state(B, abstract=True)
         ssh = lowering.state_shardings(plan, B, rules)
         def fn(params, batch, state, idx):
             logits, new_state, _ = apply(params, batch, state=state,
@@ -160,7 +157,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
+    ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")

@@ -12,10 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke
+from repro import flow as rflow
 from repro.configs.base import FlowConfig, ShapeConfig
-from repro.core import lowering
-from repro.core.plan import build_plan
 from repro.serving.engine import Engine, EngineConfig
 
 
@@ -27,27 +25,26 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--backend", default="auto",
+                    help="kernel backend policy: auto | reference | pallas "
+                         "| pallas_interpret")
     ap.add_argument("--on-device-loop", action="store_true")
     ap.add_argument("--autotune", action="store_true",
                     help="explore the pass design space (estimator-pruned, "
                          "compile-validated) for the decode cell")
     args = ap.parse_args()
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     shape = ShapeConfig("cli", "decode", args.prompt_len + args.steps,
                         args.batch)
-    flow = FlowConfig(mode="folded")
+    cm = rflow.compile(args.arch, shape, FlowConfig(mode="folded"),
+                       backend=args.backend, autotune=args.autotune,
+                       smoke=args.smoke)
     if args.autotune:
-        from repro.core import dse
-        er = dse.explore(cfg, shape, flow,
-                         validator=dse.compile_validator(cfg, shape))
-        print(er.describe())
-        plan = er.plan
-    else:
-        plan = build_plan(cfg, flow, shape)
-    print(plan.describe(stats=True))
-    params = lowering.init_params(plan, jax.random.key(0))
-    eng = Engine(plan, params, EngineConfig(temperature=args.temperature))
+        print(cm.explore_result.describe())
+    print(cm.describe(stats=True))
+    cfg = cm.cfg
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params, EngineConfig(temperature=args.temperature))
 
     rng = np.random.RandomState(0)
     batch = {"tokens": jnp.asarray(

@@ -13,9 +13,8 @@ import argparse
 
 import jax
 
-from repro.configs import get_config, get_smoke
+from repro import flow as rflow
 from repro.configs.base import FlowConfig, ShapeConfig
-from repro.core.plan import build_plan
 from repro.data.pipeline import DataConfig, SyntheticImages, SyntheticLM
 from repro.optim.adamw import AdamW
 from repro.train.trainer import Trainer, TrainerConfig
@@ -34,23 +33,23 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--mode", default="folded")
+    ap.add_argument("--backend", default="auto",
+                    help="kernel backend policy: auto | reference | pallas "
+                         "| pallas_interpret")
     ap.add_argument("--autotune", action="store_true",
                     help="explore the pass design space (estimator-pruned, "
                          "compile-validated) instead of the fixed flow")
     args = ap.parse_args()
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     shape = ShapeConfig("cli", "train", args.seq, args.batch)
-    flow = FlowConfig(mode=args.mode, microbatches=args.microbatches)
+    cm = rflow.compile(
+        args.arch, shape,
+        FlowConfig(mode=args.mode, microbatches=args.microbatches),
+        backend=args.backend, autotune=args.autotune, smoke=args.smoke)
     if args.autotune:
-        from repro.core import dse
-        er = dse.explore(cfg, shape, flow,
-                         validator=dse.compile_validator(cfg, shape))
-        print(er.describe())
-        flow, plan = er.best.flow, er.plan
-    else:
-        plan = build_plan(cfg, flow, shape)
-    print(plan.describe(stats=True))
+        print(cm.explore_result.describe())
+    print(cm.describe(stats=True))
+    cfg = cm.cfg
 
     if cfg.family == "cnn":
         data = SyntheticImages(
@@ -64,7 +63,7 @@ def main():
     opt = AdamW(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
                 total_steps=args.steps,
                 compress="int8_ef" if args.compress else None)
-    tr = Trainer(plan, opt, TrainerConfig(
+    tr = Trainer(cm, opt, TrainerConfig(
         steps=args.steps, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every, log_every=max(1, args.steps // 20)))
     _, _, hist = tr.fit(data, jax.random.key(0))

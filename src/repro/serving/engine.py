@@ -1,20 +1,22 @@
 """Batched serving engine: prefill → decode with donated rolling caches.
 
-The decode step is one jitted program with donated state (paper: autorun —
-no host control between tokens beyond the sampling loop); ``generate_fori``
-additionally runs N decode steps inside a single on-device ``fori_loop``
-(fully host-free generation, the strongest autorun analogue).
+The Engine is a thin consumer of :class:`repro.flow.CompiledModel` — the
+compiled model owns the jitted prefill/decode/generate stages (paper:
+autorun — no host control between tokens beyond the sampling loop);
+``generate_fori`` runs N decode steps inside a single on-device
+``fori_loop`` (fully host-free generation, the strongest autorun analogue).
+The Engine adds the serving-side policy: bound parameters and sampling
+configuration.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import lowering
 from repro.core.plan import ExecutionPlan
+from repro.flow import CompiledModel
 
 
 @dataclass
@@ -24,80 +26,27 @@ class EngineConfig:
 
 
 class Engine:
-    def __init__(self, plan: ExecutionPlan, params, ecfg: EngineConfig = None,
-                 mesh=None):
-        self.plan = plan
+    def __init__(self, compiled: Union[CompiledModel, ExecutionPlan], params,
+                 ecfg: EngineConfig = None, mesh=None):
+        if isinstance(compiled, ExecutionPlan):   # legacy plan-based wiring
+            compiled = CompiledModel.from_plan(compiled, mesh=mesh)
+        elif mesh is not None and mesh is not compiled.mesh:
+            # honour an explicitly requested mesh: rewrap so the jitted
+            # stages build inside it
+            compiled = CompiledModel.from_plan(compiled.plan, mesh=mesh)
+        self.compiled = compiled
+        self.plan = compiled.plan
         self.params = params
         self.ecfg = ecfg or EngineConfig()
-        self.mesh = mesh
-        self.apply = lowering.make_apply(plan)
-        ctx = mesh if mesh is not None else _nullcontext()
-        with ctx:
-            self._prefill = jax.jit(
-                lambda p, b: self.apply(p, b, mode="prefill"))
-            self._decode = jax.jit(
-                lambda p, b, st, i: self.apply(p, b, state=st,
-                                               cache_index=i, mode="decode"),
-                donate_argnums=(2,))
-
-    def _sample(self, logits, rng):
-        if self.ecfg.temperature == 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            rng, logits / self.ecfg.temperature, axis=-1).astype(jnp.int32)
+        self.mesh = compiled.mesh
 
     def generate(self, batch: Dict[str, Any], steps: int
                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
         """Prefill on the prompt batch, then decode ``steps`` tokens."""
-        S = batch["tokens"].shape[1]
-        logits, state, _ = self._prefill(self.params, batch)
-        rng = jax.random.key(self.ecfg.seed)
-        tok = self._sample(logits[:, -1], rng)
-        out = [tok]
-        for t in range(steps - 1):
-            rng, k = jax.random.split(rng)
-            lg, state, _ = self._decode(self.params, {"tokens": tok[:, None]},
-                                        state, jnp.int32(S + t))
-            tok = self._sample(lg[:, -1], k)
-            out.append(tok)
-        return jnp.stack(out, axis=1), state
+        return self.compiled.generate(
+            self.params, batch, steps,
+            temperature=self.ecfg.temperature, seed=self.ecfg.seed)
 
     def generate_fori(self, batch: Dict[str, Any], steps: int) -> jnp.ndarray:
         """Fully on-device generation: the whole decode loop is one program."""
-        S = batch["tokens"].shape[1]
-        apply = self.apply
-        params = self.params
-
-        def run(params, batch):
-            logits, state, _ = apply(params, batch, mode="prefill")
-            tok0 = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-            B = tok0.shape[0]
-            toks = jnp.zeros((B, steps), jnp.int32)
-            toks = toks.at[:, 0].set(tok0)
-
-            def body(t, carry):
-                toks, state = carry
-                cur = jax.lax.dynamic_slice_in_dim(toks, t, 1, axis=1)
-                lg, state, _ = apply(params, {"tokens": cur}, state=state,
-                                     cache_index=(S + t).astype(jnp.int32),
-                                     mode="decode")
-                nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
-                toks = jax.lax.dynamic_update_slice_in_dim(
-                    toks, nxt[:, None], t + 1, axis=1)
-                return toks, state
-
-            toks, _ = jax.lax.fori_loop(0, steps - 1, body,
-                                        (toks, state))
-            return toks
-
-        ctx = self.mesh if self.mesh is not None else _nullcontext()
-        with ctx:
-            return jax.jit(run)(params, batch)
-
-
-class _nullcontext:
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *a):
-        return False
+        return self.compiled.generate_fori(self.params, batch, steps)

@@ -68,6 +68,13 @@ def make_train_step(plan: ExecutionPlan, opt: AdamW, microbatches: int = 1):
 class Trainer:
     def __init__(self, plan: ExecutionPlan, opt: AdamW,
                  tcfg: TrainerConfig, mesh=None, rules=None):
+        # the launch layer hands us a repro.flow.CompiledModel; plan-based
+        # construction stays for core-level tests and the legacy shims
+        from repro.flow import CompiledModel
+        if isinstance(plan, CompiledModel):
+            mesh = mesh if mesh is not None else plan.mesh
+            rules = rules if rules is not None else plan.rules
+            plan = plan.plan
         self.plan, self.opt, self.tcfg = plan, opt, tcfg
         self.mesh, self.rules = mesh, rules
         self.step_fn = None

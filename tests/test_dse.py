@@ -47,11 +47,59 @@ def test_matmul_tile_divides_odd_dims():
 
 def test_explore_deterministic():
     cfg = get_smoke("llama3.2-1b")
-    r1 = dse.explore(cfg, SMOKE_TRAIN)
-    r2 = dse.explore(cfg, SMOKE_TRAIN)
+    r1 = dse.explore(cfg, SMOKE_TRAIN, use_cache=False)
+    r2 = dse.explore(cfg, SMOKE_TRAIN, use_cache=False)
+    assert r1 is not r2                    # genuinely recomputed
     assert r1.best.flow == r2.best.flow
     assert [c.knobs for c in r1.candidates] == [c.knobs for c in r2.candidates]
     assert r1.plan.describe() == r2.plan.describe()
+
+
+def test_explore_result_cached_across_calls():
+    """Identical (cfg, shape, flow) searches are served from the process
+    cache — --autotune across serve/train/dryrun pays once."""
+    cfg = get_smoke("llama3.2-1b")
+    dse.clear_explore_cache()
+    calls = []
+
+    def validator(flow):
+        calls.append(flow)
+        return dse.compile_candidate(cfg, SMOKE_TRAIN, flow)
+
+    r1 = dse.explore(cfg, SMOKE_TRAIN, validator=validator, top_k=1)
+    n = len(calls)
+    assert n >= 1
+    r2 = dse.explore(cfg, SMOKE_TRAIN, validator=validator, top_k=1)
+    assert r2 is r1                        # cache hit: no recompute
+    assert len(calls) == n                 # ...and no re-validation
+    assert dse.explore_cache_stats()["hits"] == 1
+
+
+def test_explore_cache_keys_on_backend():
+    """The fingerprint includes the flow (kernel_backend included): a
+    different backend policy is a different search."""
+    import dataclasses as dc
+    cfg = get_smoke("llama3.2-1b")
+    dse.clear_explore_cache()
+    f_auto = FlowConfig(mode="folded")
+    f_ref = dc.replace(f_auto, kernel_backend="reference")
+    r1 = dse.explore(cfg, SMOKE_TRAIN, f_auto)
+    r2 = dse.explore(cfg, SMOKE_TRAIN, f_ref)
+    assert r1 is not r2
+    assert dse.explore_cache_stats() == {"hits": 0, "misses": 2}
+    assert dse.explore(cfg, SMOKE_TRAIN, f_auto) is r1
+
+
+def test_kernel_backend_is_a_tunable_dimension():
+    """The KernelSelectPass exposes the registry's backend policy to the
+    explorer (ISSUE acceptance: DSE searches over kernel selection)."""
+    cfg = get_smoke("llama3.2-1b")
+    space = dse.tunable_space(cfg, FlowConfig(mode="folded"), SMOKE_TRAIN)
+    assert space["kernel_backend"] == ("auto", "reference")
+    flows = dse.enumerate_candidates(
+        cfg, SMOKE_TRAIN, FlowConfig(mode="folded"),
+        space={"kernel_backend": ("auto", "reference")})
+    assert {f.kernel_backend for f, _ in flows} == {"auto", "reference"}
 
 
 def test_explore_fits_budget_cnns_and_lm():

@@ -1,0 +1,166 @@
+"""repro.flow public-API tests: the compile() facade, CompiledModel surface,
+autotune caching, deprecation shims, and Engine/Trainer integration."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import flow as rflow
+from repro.configs import get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+from repro.optim.adamw import AdamW
+
+from conftest import SMOKE_SHAPE, smoke_batch
+
+DECODE = ShapeConfig("api", "decode", 24, 2)
+
+
+def test_compile_accepts_names_and_configs():
+    cm1 = rflow.compile("llama3.2-1b", SMOKE_SHAPE, smoke=True)
+    cm2 = rflow.compile(get_smoke("llama3.2-1b"), SMOKE_SHAPE)
+    assert cm1.plan.describe() == cm2.plan.describe()
+    cm3 = rflow.compile("lenet5", "train_4k")       # str shape-cell name
+    assert cm3.shape.name == "train_4k"
+    with pytest.raises(KeyError):
+        rflow.compile("llama3.2-1b", "no_such_shape", smoke=True)
+
+
+def test_compiled_model_owns_the_flow_surface():
+    cm = rflow.compile("llama3.2-1b", SMOKE_SHAPE, smoke=True)
+    assert cm.plan.units and cm.plan.tiles and cm.plan.kernels
+    assert "kernels: backend=auto" in cm.describe()
+    params = cm.init_params(jax.random.key(0))
+    batch = smoke_batch(cm.cfg)
+    logits, state, _ = cm.prefill(params, {"tokens": batch["tokens"]})
+    assert logits.shape[0] == batch["tokens"].shape[0]
+    # per-stage compile stats recorded on first invocation
+    assert "prefill" in cm.stats["stages"]
+    assert cm.stats["stages"]["prefill"]["first_call_s"] >= 0
+    assert "stages: " in cm.describe(stats=True)
+
+
+def test_backend_kwarg_overrides_flow():
+    cm = rflow.compile("llama3.2-1b", SMOKE_SHAPE, smoke=True,
+                       backend="reference")
+    assert cm.flow.kernel_backend == "reference"
+    assert all(b == "ref" for b in cm.plan.kernels.values())
+    # default backend="auto" keeps a flow-specified backend
+    cm2 = rflow.compile("llama3.2-1b", SMOKE_SHAPE, smoke=True,
+                        flow=FlowConfig(mode="folded",
+                                        kernel_backend="pallas_interpret"))
+    assert cm2.flow.kernel_backend == "pallas_interpret"
+
+
+def test_train_step_and_generate_roundtrip():
+    cm = rflow.compile("llama3.2-1b", SMOKE_SHAPE, smoke=True)
+    params = cm.init_params(jax.random.key(0))
+    opt = AdamW(lr=1e-3)
+    step = cm.train_step(opt)
+    batch = smoke_batch(cm.cfg)
+    params, _, metrics = step(params, opt.init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    toks, state = cm.generate(params, {"tokens": batch["tokens"][:, :8]},
+                              steps=4)
+    assert toks.shape == (2, 4)
+    toks2 = cm.generate_fori(params, {"tokens": batch["tokens"][:, :8]},
+                             steps=4)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks2))
+
+
+def test_engine_is_a_thin_consumer():
+    from repro.serving.engine import Engine, EngineConfig
+    cm = rflow.compile("llama3.2-1b", DECODE,
+                       FlowConfig(mode="folded", precision="fp32"),
+                       smoke=True)
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params, EngineConfig(temperature=0.0))
+    assert eng.compiled is cm and eng.plan is cm.plan
+    batch = smoke_batch(cm.cfg, B=2, S=8, with_labels=False)
+    t1, _ = eng.generate(batch, steps=4)
+    t2, _ = cm.generate(params, batch, steps=4)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    # legacy plan-based construction still works (shim path)
+    eng2 = Engine(cm.plan, params)
+    t3, _ = eng2.generate(batch, steps=4)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t3))
+
+
+def test_trainer_accepts_compiled_model():
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.train.trainer import Trainer, TrainerConfig
+    cm = rflow.compile("llama3.2-1b", SMOKE_SHAPE, smoke=True)
+    data = SyntheticLM(DataConfig(vocab_size=cm.cfg.vocab_size, seq_len=16,
+                                  global_batch=4))
+    tr = Trainer(cm, AdamW(lr=3e-3, warmup_steps=2, total_steps=8),
+                 TrainerConfig(steps=8, log_every=2))
+    _, _, hist = tr.fit(data, jax.random.key(0))
+    assert len(hist) >= 2
+
+
+def test_autotune_keeps_pinned_backend():
+    """An explicitly pinned backend is a constraint the explorer must not
+    override: the kernel_backend dimension collapses to the pinned value."""
+    from repro.core import dse
+    cfg = get_smoke("llama3.2-1b")
+    space = dse.tunable_space(
+        cfg, FlowConfig(mode="folded", kernel_backend="reference"),
+        SMOKE_SHAPE)
+    assert space["kernel_backend"] == ("reference",)
+    dse.clear_explore_cache()
+    cm = rflow.compile(cfg, SMOKE_SHAPE, backend="reference", autotune=True)
+    assert cm.flow.kernel_backend == "reference"
+    assert all(b == "ref" for b in cm.plan.kernels.values())
+
+
+def test_autotune_uses_the_explorer_cache():
+    from repro.core import dse
+    dse.clear_explore_cache()
+    cm1 = rflow.compile("llama3.2-1b", SMOKE_SHAPE, smoke=True, autotune=True)
+    assert cm1.explore_result is not None
+    assert "dse: best=" in cm1.describe()
+    cm2 = rflow.compile("llama3.2-1b", SMOKE_SHAPE, smoke=True, autotune=True)
+    assert cm2.explore_result is cm1.explore_result   # cache hit
+    assert dse.explore_cache_stats()["hits"] == 1
+
+
+def test_deprecation_shims_warn_once():
+    import repro.core.plan as plan_mod
+    from repro.core.plan import build_plan
+    cfg = get_smoke("llama3.2-1b")
+    plan_mod._DEPRECATION_WARNED = False
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        build_plan(cfg, FlowConfig(mode="folded"), SMOKE_SHAPE)
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 1
+        assert "repro.flow.compile" in str(dep[0].message)
+        # further legacy calls in the same process: silent
+        plan = build_plan(cfg, FlowConfig(mode="folded"), SMOKE_SHAPE)
+        from repro.core import lowering
+        lowering.make_apply(plan)
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 1
+
+
+def test_facade_is_the_only_path_in_launch_serving_examples():
+    """Acceptance guard: no direct build_plan/make_apply wiring outside
+    repro/flow, the core, and the shims."""
+    import os
+    import re
+    root = os.path.join(os.path.dirname(__file__), "..")
+    offenders = []
+    targets = []
+    for sub in ("src/repro/launch", "src/repro/serving", "examples"):
+        d = os.path.join(root, sub)
+        targets += [os.path.join(d, f) for f in os.listdir(d)
+                    if f.endswith(".py")]
+    pat = re.compile(r"\bbuild_plan\s*\(|\blowering\.make_apply\s*\(|"
+                     r"\bmake_apply\s*\(")
+    for path in targets:
+        with open(path) as f:
+            src = f.read()
+        if pat.search(src):
+            offenders.append(os.path.relpath(path, root))
+    assert not offenders, offenders

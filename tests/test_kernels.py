@@ -111,6 +111,43 @@ def test_lru_scan(spec):
     assert relerr(y, lru_scan_ref(a, b)) < 1e-5
 
 
+@pytest.mark.parametrize("tile", [(4, 8), (3, 128), (16, 4), (5, 8)])
+@pytest.mark.parametrize("stride,pad", [(1, "SAME"), (2, "SAME"),
+                                        (2, "VALID")])
+def test_conv2d_tile_tuple_regression(tile, stride, pad):
+    """Regression for the dropped tile component: the wrapper used to keep
+    only tile[1] (channel block) and discard tile[0] (row block).  Both
+    components must now reach the kernel and stay correct for any pair,
+    including row blocks that don't divide H_out (divisor fallback)."""
+    N, H, W, CI, CO = 2, 12, 12, 6, 16
+    x = jnp.asarray(R.randn(N, H, W, CI), jnp.float32)
+    w = jnp.asarray(R.randn(3, 3, CI, CO), jnp.float32)
+    y = ops.conv2d_fused(x, w, stride=stride, padding=pad, act="relu",
+                         tile=tile, interpret=True)
+    r = ref.conv2d_fused_ref(x, w, stride=stride, padding=pad, act="relu")
+    assert relerr(y, r) < 1e-5
+
+
+def test_conv2d_tile_tuple_forwards_both_components(monkeypatch):
+    """The ops-layer wrapper must consume the full (block_h, block_c) tuple
+    the tiling pass selected, not just the channel half."""
+    from repro.kernels import conv2d as _cv
+    captured = {}
+    orig = _cv.conv2d_fused
+
+    def spy(x, w, **kw):
+        captured.update(kw)
+        return orig(x, w, **kw)
+
+    monkeypatch.setattr(_cv, "conv2d_fused", spy)
+    x = jnp.asarray(R.randn(1, 8, 8, 4), jnp.float32)
+    w = jnp.asarray(R.randn(3, 3, 4, 8), jnp.float32)
+    ops.conv2d_fused(x, w, tile=(4, 8), interpret=True)
+    assert captured["block_h"] == 4 and captured["block_c"] == 8
+    ops.conv2d_fused(x, w, tile=64, interpret=True)     # bare int: block_c
+    assert captured["block_h"] is None and captured["block_c"] == 64
+
+
 @pytest.mark.parametrize("spec", [
     (2, 16, 16, 3, 8, 3, 1, "SAME", True),
     (1, 17, 17, 4, 16, 5, 2, "SAME", False),

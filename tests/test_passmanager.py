@@ -12,7 +12,7 @@ from conftest import SMOKE_SHAPE
 SERVE = ShapeConfig("bench", "prefill", 64, 8)
 
 EXPECTED_PASSES = ["graph", "fusion", "streaming", "folding", "tiling",
-                   "precision", "caching"]
+                   "precision", "caching", "kernels"]
 
 
 def test_default_pipeline_order():

@@ -15,37 +15,48 @@ BASE_TILES = ("{'matmul': (128, 128, 128), 'attention': (128, 128), "
               "'decode_attention': 512, 'conv2d': (8, 128), "
               "'wkv_chunk': 16, 'ce_chunk': 256}")
 
+# KernelRegistry resolution on the CPU test platform: "auto" resolves every
+# accelerable op to the reference backend (Pallas is chosen on TPU only)
+KERNELS = ("  kernels: backend=auto attention=ref conv2d=ref "
+           "decode_attention=ref glu_matmul=ref matmul=ref rg_lru=ref")
+
 GOLDEN = {
-    ("lenet5", "opt"): """\
+    ("lenet5", "opt"): f"""\
 plan[lenet5 x bench] mode=pipelined
   passes: fuse=True fold=True tiles=True cw=True prec=bf16
   units: 3 (0 folded: )
-  tiles: {'matmul': (64, 120, 84), 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}""",
+  tiles: {{'matmul': (64, 120, 84), 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}}
+{KERNELS}""",
     ("lenet5", "base"): f"""\
 plan[lenet5 x bench] mode=folded
   passes: fuse=False fold=False tiles=False cw=False prec=fp32
   units: 3 (0 folded: )
-  tiles: {BASE_TILES}""",
-    ("mobilenetv1", "opt"): """\
+  tiles: {BASE_TILES}
+{KERNELS}""",
+    ("mobilenetv1", "opt"): f"""\
 plan[mobilenetv1 x bench] mode=pipelined
   passes: fuse=True fold=True tiles=True cw=True prec=bf16
   units: 15 (0 folded: )
-  tiles: {'matmul': (64, 1024, 512), 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}""",
+  tiles: {{'matmul': (64, 1024, 512), 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}}
+{KERNELS}""",
     ("mobilenetv1", "base"): f"""\
 plan[mobilenetv1 x bench] mode=folded
   passes: fuse=False fold=False tiles=False cw=False prec=fp32
   units: 15 (0 folded: )
-  tiles: {BASE_TILES}""",
-    ("resnet34", "opt"): """\
+  tiles: {BASE_TILES}
+{KERNELS}""",
+    ("resnet34", "opt"): f"""\
 plan[resnet34 x bench] mode=pipelined
   passes: fuse=True fold=True tiles=True cw=True prec=bf16
   units: 18 (0 folded: )
-  tiles: {'matmul': (64, 512, 512), 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}""",
+  tiles: {{'matmul': (64, 512, 512), 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}}
+{KERNELS}""",
     ("resnet34", "base"): f"""\
 plan[resnet34 x bench] mode=folded
   passes: fuse=False fold=False tiles=False cw=False prec=fp32
   units: 18 (0 folded: )
-  tiles: {BASE_TILES}""",
+  tiles: {BASE_TILES}
+{KERNELS}""",
 }
 
 
@@ -59,14 +70,27 @@ def test_cnn_plan_golden(arch, variant):
 def test_lm_plan_golden():
     plan = build_plan(get_smoke("llama3.2-1b"), FlowConfig(mode="folded"),
                       SMOKE_TRAIN)
-    assert plan.describe() == """\
+    assert plan.describe() == f"""\
 plan[llama3.2-1b x smoke] mode=folded
   passes: fuse=True fold=True tiles=True cw=True prec=bf16
   units: 3 (1 folded: 3x1)
-  tiles: {'matmul': (16, 64, 192), 'attention': (16, 16), 'decode_attention': 512, 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}"""
+  tiles: {{'matmul': (16, 64, 192), 'attention': (16, 16), 'decode_attention': 512, 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}}
+{KERNELS}"""
 
 
 def test_describe_is_deterministic():
     args = (get_config("resnet34"), FlowConfig(mode="auto"), SERVE)
     assert build_plan(*args).describe(stats=True) == \
         build_plan(*args).describe(stats=True)
+
+
+@pytest.mark.parametrize("arch,variant", sorted(GOLDEN))
+def test_old_and_new_entry_points_identical(arch, variant):
+    """Byte-identical plans through the deprecated build_plan shim and the
+    repro.flow.compile facade (same golden snapshot)."""
+    from repro import flow as rflow
+    fl = FlowConfig(mode="auto") if variant == "opt" else FlowConfig().base()
+    old = build_plan(get_config(arch), fl, SERVE)
+    new = rflow.compile(get_config(arch), SERVE, fl)
+    assert old.describe(stats=True) == new.plan.describe(stats=True)
+    assert new.plan.describe() == GOLDEN[(arch, variant)]

@@ -1,24 +1,23 @@
-"""Serving-engine integration: batched generation, host-free decode loop."""
+"""Serving-engine integration: batched generation, host-free decode loop.
+The engine consumes a repro.flow.CompiledModel (the public API)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke
+from repro import flow as rflow
 from repro.configs.base import FlowConfig
-from repro.core import lowering
-from repro.core.plan import build_plan
 from repro.serving.engine import Engine, EngineConfig
 
 from conftest import SMOKE_SHAPE, smoke_batch
 
 
 def _engine(arch="llama3.2-1b"):
-    cfg = get_smoke(arch)
-    plan = build_plan(cfg, FlowConfig(mode="folded", precision="fp32"),
-                      SMOKE_SHAPE)
-    params = lowering.init_params(plan, jax.random.key(0))
-    return cfg, plan, Engine(plan, params, EngineConfig(temperature=0.0))
+    cm = rflow.compile(arch, SMOKE_SHAPE,
+                       FlowConfig(mode="folded", precision="fp32"),
+                       smoke=True)
+    params = cm.init_params(jax.random.key(0))
+    return cm.cfg, cm, Engine(cm, params, EngineConfig(temperature=0.0))
 
 
 def test_generate_shapes_and_determinism():
@@ -43,12 +42,11 @@ def test_generate_fori_matches_python_loop():
 def test_generate_matches_teacher_forcing():
     """Greedy generation must equal argmax of a teacher-forced forward over
     the generated prefix (cache correctness across many steps)."""
-    cfg, plan, eng = _engine()
-    apply = lowering.make_apply(plan)
+    cfg, cm, eng = _engine()
     batch = smoke_batch(cfg, B=1, S=6, with_labels=False)
     toks, _ = eng.generate(batch, steps=4)
     full = jnp.concatenate([batch["tokens"], toks[:, :3]], axis=1)
-    logits, _, _ = apply(eng.params, {"tokens": full}, mode="prefill")
+    logits, _, _ = cm.apply(eng.params, {"tokens": full}, mode="prefill")
     want = jnp.argmax(logits[:, -1], -1)
     np.testing.assert_array_equal(np.asarray(toks[:, 3]), np.asarray(want))
 
@@ -64,9 +62,9 @@ def test_generate_stateful_archs(arch):
 
 
 def test_temperature_sampling_runs():
-    cfg, plan, _ = _engine()
-    params = lowering.init_params(plan, jax.random.key(0))
-    eng = Engine(plan, params, EngineConfig(temperature=0.8, seed=1))
+    cfg, cm, _ = _engine()
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params, EngineConfig(temperature=0.8, seed=1))
     batch = smoke_batch(cfg, B=2, S=8, with_labels=False)
     toks, _ = eng.generate(batch, steps=4)
     assert toks.shape == (2, 4)
