@@ -178,6 +178,31 @@ def table7_tuned_vs_base() -> List[Tuple]:
     return rows
 
 
+def table8_sharded_vs_unsharded() -> List[Tuple]:
+    """Estimator view of the sharding decision: per-device footprint, step
+    time, dominant roof, and collective bytes for the unsharded flow vs
+    dp/tp mesh factorizations of 8 devices — the mesh analogue of Table IV's
+    base-vs-optimized delta."""
+    from repro.core.estimator import (estimate_comm_bytes, estimate_footprint,
+                                      estimate_step_seconds)
+    rows = []
+    shape = SHAPES["train_4k"]
+    splits = [("unsharded", None),
+              ("dp8", (("data", 8), ("model", 1))),
+              ("dp4xtp2", (("data", 4), ("model", 2))),
+              ("dp2xtp4", (("data", 2), ("model", 4)))]
+    for name in ("llama3.2-1b", "mixtral-8x7b"):
+        cfg = get_config(name)
+        for label, split in splits:
+            flow = FlowConfig(mode="folded", mesh_split=split)
+            fp = estimate_footprint(cfg, shape, flow)
+            st = estimate_step_seconds(cfg, shape, flow)
+            comm = estimate_comm_bytes(cfg, shape, flow)
+            rows.append((name, label, fp["total"], st["step_s"],
+                         st["bound"], comm["total"]))
+    return rows
+
+
 def table5_comparison() -> List[Tuple]:
     """Our optimized flow vs a hand-written jnp/XLA implementation (the
     'TVM/TensorFlow CPU' stand-in)."""

@@ -36,6 +36,10 @@ def main() -> None:
         print(f"table7/{name}/base,{us_b:.1f},est_bytes={fp_b:.3g}")
         print(f"table7/{name}/tuned,{us_t:.1f},est_bytes={fp_t:.3g};"
               f"est_speedup={speed:.2f}x;knobs={knobs}")
+    for name, label, fp, step, bound, comm in T.table8_sharded_vs_unsharded():
+        print(f"table8/{name}/{label},{step * 1e6:.1f},"
+              f"mem_per_dev={fp / 2 ** 30:.2f}GiB;bound={bound};"
+              f"comm_bytes={comm:.3g}")
 
     res = os.path.join(os.path.dirname(__file__), "..", "results",
                        "dryrun_baseline.json")

@@ -161,6 +161,11 @@ class TuningConfig:
     backend_candidates: Tuple[str, ...] = ("auto", "reference")
     top_k: int = 3                         # candidates validated compile-in-loop
     max_candidates: int = 16384            # enumeration safety cap
+    # device count the ShardingPass enumerates dp/tp/pp mesh factorizations
+    # for (0 => mesh is not a search dimension).  ``dse.explore`` sets it
+    # from its ``devices`` argument; an explicit ``FlowConfig.mesh_split``
+    # pins the factorization instead.
+    mesh_devices: int = 0
 
 
 @dataclass(frozen=True)
@@ -178,6 +183,11 @@ class FlowConfig:
     dp_axes: Tuple[str, ...] = ("data",)
     tp_axis: Optional[str] = "model"
     pp_axis: Optional[str] = None      # set to "pod" for cross-pod pipelining
+    # the chosen mesh factorization as ordered (axis, size) pairs, e.g.
+    # (("data", 2), ("model", 2)).  Set by repro.flow.compile(mesh=...) from
+    # the MeshSpec, or by the DSE when it searches dp/tp/pp splits; consumed
+    # by the ShardingPass, which records the partitioning on the plan.
+    mesh_split: Optional[Tuple[Tuple[str, int], ...]] = None
     microbatches: int = 1              # grad-accum / pipeline microbatches
     # training
     remat: str = "block"               # none | block | nested (two-level)

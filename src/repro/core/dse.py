@@ -66,12 +66,14 @@ class ExploreResult:
     n_enumerated: int
     validated: List[Dict[str, Any]]      # compile-in-the-loop measurements
     budget_bytes: int
+    n_rejected: int = 0                  # uneven-shard candidates screened out
 
     def describe(self) -> str:
         c = self.best
         lines = [
             f"dse[{self.plan.cfg.name} x {self.plan.shape.name}] "
-            f"enumerated={self.n_enumerated} pruned_to={len(self.candidates)} "
+            f"enumerated={self.n_enumerated} rejected={self.n_rejected} "
+            f"pruned_to={len(self.candidates)} "
             f"validated={len(self.validated)}",
             f"  budget: {self.budget_bytes / 2 ** 30:.1f} GiB/device",
             f"  best: {c.knob_str()}",
@@ -79,10 +81,12 @@ class ExploreResult:
             f"step={c.step_s * 1e3:.3f} ms ({c.bound}-bound) fits={c.fits}",
         ]
         for v in self.validated:
+            extra = (f" step={v['measured_step_s'] * 1e3:.3f}ms"
+                     if "measured_step_s" in v else "")
             lines.append(
                 f"  measured[{v['knobs']}]: "
                 f"{v['per_device_bytes'] / 2 ** 30:.3f} GiB/device "
-                f"fits={v['fits']}")
+                f"fits={v['fits']}{extra}")
         return "\n".join(lines)
 
 
@@ -186,6 +190,28 @@ def compile_validator(cfg: ModelConfig,
     return lambda flow: compile_candidate(cfg, shape, flow)
 
 
+def measure_validator(cfg: ModelConfig, shape: ShapeConfig, *,
+                      mesh=None, iters: int = 3
+                      ) -> Callable[[FlowConfig], Dict]:
+    """Measured-time validator (``repro.flow.compile(validate="measure")``):
+    compiles each candidate into a CompiledModel and wall-clock-times its
+    shape-appropriate stage via :meth:`CompiledModel.measure`.  The returned
+    records carry ``measured_step_s``, so :func:`explore` (with
+    ``rank_measured=True``) ranks the fitting survivors by real step time
+    instead of compile stats alone."""
+    def validate(flow: FlowConfig) -> Dict[str, Any]:
+        from repro import flow as rflow
+        m = mesh
+        if m is None and flow.mesh_split is not None:
+            # mesh-search mode: each candidate must be timed on the mesh it
+            # proposes, not as an unsharded single-device executable
+            from repro.distributed.meshspec import MeshSpec
+            m = MeshSpec.of(flow.mesh_split).build()
+        cm = rflow.compile(cfg, shape, flow, mesh=m)
+        return cm.measure(iters=iters)
+    return validate
+
+
 # ---------------------------------------------------------------------------
 # the explorer
 # ---------------------------------------------------------------------------
@@ -201,15 +227,17 @@ def _explore_fingerprint(cfg: ModelConfig, shape: ShapeConfig,
                          flow: FlowConfig, devices: int,
                          top_k: Optional[int],
                          space: Optional[Dict[str, Sequence[Any]]],
-                         validated: bool) -> Tuple:
+                         validate_tag: str) -> Tuple:
     space_key = None if space is None else tuple(
         sorted((k, tuple(v)) for k, v in space.items()))
-    # cfg/shape/flow are frozen dataclasses (hashable); kernel_backend is
-    # part of flow, so backend changes miss the cache as required.
-    # ``validated`` keeps estimator-only results from answering for
-    # compile-validated searches (different validators still alias — they
-    # are all compile-in-the-loop measurements of the same candidates).
-    return (cfg, shape, flow, devices, top_k, space_key, validated)
+    # cfg/shape/flow are frozen dataclasses (hashable); kernel_backend AND
+    # the mesh topology (flow.mesh_split + tuning.mesh_devices, normalized
+    # by explore() before fingerprinting) are part of flow, so a backend or
+    # mesh change in-process misses the cache as required.  ``validate_tag``
+    # ("none" | "compile" | "measure") keeps estimator-only results from
+    # answering for validated searches and compile-validated ones from
+    # answering for measured-time searches.
+    return (cfg, shape, flow, devices, top_k, space_key, validate_tag)
 
 
 def explore_cache_stats() -> Dict[str, int]:
@@ -224,27 +252,56 @@ def clear_explore_cache() -> None:
 def explore(cfg: ModelConfig, shape: ShapeConfig,
             base_flow: Optional[FlowConfig] = None, *,
             devices: int = 1,
+            mesh: Optional[Any] = None,
             validator: Optional[Callable[[FlowConfig], Dict]] = None,
             space: Optional[Dict[str, Sequence[Any]]] = None,
             top_k: Optional[int] = None,
+            rank_measured: bool = False,
             use_cache: bool = True) -> ExploreResult:
     """Search the joint pass design space for the fastest candidate that
     fits the device budget.
 
-    Estimator scoring prunes the full space; the top-k survivors are
-    validated compile-in-the-loop when a ``validator`` is given (see
-    :func:`compile_validator`; the multi-pod dry-run path passes a
-    ``run_cell``-backed one).  Without a validator the estimator ranking
+    The mesh is a search dimension: with ``devices > 1`` (or ``mesh=``) the
+    ShardingPass exposes every dp/tp/pp factorization of the device count as
+    ``mesh_split`` candidates, and candidates whose splits would produce
+    uneven shards are rejected before scoring (the paper's even-division
+    rule, across devices).  An explicit ``mesh`` (MeshSpec / axis-size dict /
+    jax Mesh) pins the factorization instead, like a pinned kernel backend.
+
+    Estimator scoring (roofline + footprint + the mesh's communication cost)
+    prunes the full space; the top-k survivors are validated when a
+    ``validator`` is given (see :func:`compile_validator` and
+    :func:`measure_validator`; the multi-pod dry-run path passes a
+    ``run_cell``-backed one).  With ``rank_measured=True`` every top-k
+    survivor is validated and the fitting one with the smallest
+    ``measured_step_s`` wins (measured-time ranking); otherwise the first
+    fitting survivor wins.  Without a validator the estimator ranking
     decides alone.
 
-    Identical searches (same cfg/shape/base-flow/devices fingerprint) are
-    served from a process-level cache — including their recorded
-    validations — so repeated ``--autotune`` invocations in one process
-    don't redo the sweep.  ``use_cache=False`` forces a fresh search.
+    Identical searches (same cfg/shape/base-flow/devices/mesh-topology
+    fingerprint) are served from a process-level cache — including their
+    recorded validations — so repeated ``--autotune`` invocations in one
+    process don't redo the sweep.  ``use_cache=False`` forces a fresh
+    search.
     """
     flow0 = base_flow if base_flow is not None else FlowConfig(mode="folded")
+    if mesh is not None:
+        from repro.distributed.meshspec import MeshSpec
+        spec = MeshSpec.of(mesh)
+        devices = spec.size
+        if flow0.mesh_split is None:
+            flow0 = dataclasses.replace(flow0, mesh_split=spec.axes)
+    if devices > 1 and flow0.tuning.mesh_devices != devices:
+        # the ShardingPass reads the device count off the tuning config to
+        # enumerate mesh factorizations; folding it into the flow also folds
+        # the topology into the cache fingerprint
+        flow0 = dataclasses.replace(
+            flow0, tuning=dataclasses.replace(flow0.tuning,
+                                              mesh_devices=devices))
+    validate_tag = "none" if validator is None else \
+        ("measure" if rank_measured else "compile")
     fp_key = _explore_fingerprint(cfg, shape, flow0, devices, top_k, space,
-                                  validator is not None)
+                                  validate_tag)
     if use_cache and fp_key in _EXPLORE_CACHE:
         _EXPLORE_CACHE_STATS["hits"] += 1
         return _EXPLORE_CACHE[fp_key]
@@ -253,9 +310,28 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
     budget = tuning.hbm_bytes
     k = top_k if top_k is not None else tuning.top_k
 
+    from repro.core.passes.sharding import split_rejection_reason
     enumerated = enumerate_candidates(cfg, shape, flow0, space=space)
-    cands: List[Candidate] = []
+    # the divisibility screen applies to *searched* splits only: a pinned
+    # mesh (compile(mesh=...)) is a given — the solver simply leaves axes it
+    # cannot use unsharded, exactly as the launch wiring always did
+    searching = flow0.mesh_split is None
+    survivors = []
+    n_rejected = 0
     for flow, knobs in enumerated:
+        if searching and flow.mesh_split is not None and \
+                split_rejection_reason(cfg, shape, flow, flow.mesh_split):
+            n_rejected += 1            # uneven shards never survive pruning
+            continue
+        survivors.append((flow, knobs))
+    if not survivors and enumerated:
+        # every split was screened out (e.g. a CNN whose batch doesn't cover
+        # the device count).  The screen is advisory, not fatal: the solver
+        # leaves axes it cannot use unsharded, so any split still compiles —
+        # readmit everything and let the estimator ranking decide.
+        survivors, n_rejected = enumerated, 0
+    cands: List[Candidate] = []
+    for flow, knobs in survivors:
         fp = estimator.estimate_footprint(cfg, shape, flow, devices)
         st = estimator.estimate_step_seconds(cfg, shape, flow, devices)
         cands.append(Candidate(flow, knobs, fp["total"], st["step_s"],
@@ -273,22 +349,29 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
     best = top[0]
     if validator is not None:
         chosen = None
+        chosen_t = float("inf")
         for c in top:
             r = dict(validator(c.flow))
             r["knobs"] = c.knob_str()
             r["fits"] = bool(r["per_device_bytes"] < budget)
             validated.append(r)
-            if r["fits"]:
-                chosen = c
-                break          # first fitting candidate wins; don't pay
-                               # further compiles for report decoration
+            if not r["fits"]:
+                continue
+            if rank_measured:
+                t = float(r.get("measured_step_s", float("inf")))
+                if t < chosen_t:
+                    chosen, chosen_t = c, t
+                continue           # measured ranking needs every survivor
+            chosen = c
+            break                  # first fitting candidate wins; don't pay
+                                   # further compiles for report decoration
         best = chosen if chosen is not None else top[0]
 
     from repro.core.plan import _build_plan
     plan = _build_plan(cfg, best.flow, shape)
     result = ExploreResult(best=best, plan=plan, candidates=pool,
                            n_enumerated=len(enumerated), validated=validated,
-                           budget_bytes=budget)
+                           budget_bytes=budget, n_rejected=n_rejected)
     if use_cache:
         _EXPLORE_CACHE[fp_key] = result
     return result

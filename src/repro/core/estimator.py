@@ -18,9 +18,9 @@ from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
 # config change, not a code change.
 DEVICE_PRESETS: Dict[str, Dict[str, float]] = {
     "v5e": {"hbm_bytes": 16 * 1024 ** 3, "hbm_bw": 819e9,
-            "bf16_flops": 197e12},
+            "bf16_flops": 197e12, "ici_bw": 200e9},
     "v5p": {"hbm_bytes": 95 * 1024 ** 3, "hbm_bw": 2765e9,
-            "bf16_flops": 459e12},
+            "bf16_flops": 459e12, "ici_bw": 600e9},
 }
 
 
@@ -123,6 +123,75 @@ def hbm_bytes_kernel_path(cfg: ModelConfig, shape: ShapeConfig,
 def _act_dtype_bytes(flow: FlowConfig) -> int:
     return 2 if flow.precision == "bf16" else 4
 
+
+def mesh_parallel_sizes(flow: FlowConfig) -> Dict[str, int]:
+    """(dp, tp, pp) sizes implied by ``flow.mesh_split`` under the flow's
+    axis-role convention (size-1 tp/pp degenerate; every other axis is data
+    parallelism).  All 1 without a mesh split."""
+    if not flow.mesh_split:
+        return {"dp": 1, "tp": 1, "pp": 1}
+    from repro.core.passes.sharding import split_roles
+    sizes = dict(flow.mesh_split)
+    dp_axes, tp_axis, pp_axis = split_roles(flow, flow.mesh_split)
+    dp = 1
+    for a in dp_axes:
+        dp *= sizes.get(a, 1)
+    return {"dp": dp,
+            "tp": sizes.get(tp_axis, 1) if tp_axis else 1,
+            "pp": sizes.get(pp_axis, 1) if pp_axis else 1}
+
+
+def _effective_devices(cfg: ModelConfig, flow: FlowConfig,
+                       devices: int) -> int:
+    """Sharding denominator for a mesh split: only the axes the model can
+    actually use count (a CNN leaves the tp axis idle — its params replicate
+    over it, so dividing by the raw axis product would understate the
+    footprint and overstate the compute parallelism)."""
+    if not flow.mesh_split:
+        return devices
+    par = mesh_parallel_sizes(flow)
+    tp = par["tp"] if cfg.family != "cnn" else 1
+    return max(1, par["dp"] * tp * par["pp"])
+
+
+def estimate_comm_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                        flow: FlowConfig) -> Dict[str, float]:
+    """Per-device collective traffic per step, from the partition decisions
+    the mesh split implies — the communication analogue of the MACC count.
+
+    * **dp (FSDP/ZeRO-3)** — every microbatch re-all-gathers the sharded
+      weights at use; training reduce-scatters fp32 gradients once per step.
+    * **tp (Megatron)** — two activation all-reduce rounds per layer
+      (attention out + FFN out), with the backward re-reductions in train.
+    * **pp (GPipe)** — per-microbatch boundary activations ppermuted
+      stage -> stage (fwd, plus bwd in train).
+    """
+    out = {"all_gather": 0.0, "reduce_scatter": 0.0, "all_reduce": 0.0,
+           "p2p": 0.0, "total": 0.0}
+    if not flow.mesh_split:
+        return out                       # unmeshed: skip the graph walk
+    par = mesh_parallel_sizes(flow)
+    dp, tp, pp = par["dp"], par["tp"], par["pp"]
+    adt = _act_dtype_bytes(flow)
+    n = count_params(cfg, active_only=cfg.moe is not None)
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1)
+    train = shape.kind == "train"
+    if dp > 1:
+        gathers = max(flow.microbatches, 1) if train else 1
+        out["all_gather"] = n * adt * (dp - 1) / dp * gathers
+        if train:
+            out["reduce_scatter"] = 4.0 * n * (dp - 1) / dp
+    if tp > 1 and cfg.family != "cnn":     # CNNs leave the tp axis unused
+        act = tokens / dp * cfg.d_model * adt      # per-device activations
+        rounds = 2 * cfg.n_layers * (3 if train else 1)
+        out["all_reduce"] = 2.0 * act * (tp - 1) / tp * rounds
+    if pp > 1:
+        act = tokens / dp * cfg.d_model * adt
+        out["p2p"] = act * (pp - 1) / pp * (3 if train else 1)
+    out["total"] = sum(out.values())
+    return out
+
 _REMAT_FACTOR = {"none": 10.0, "block": 2.0, "nested": 1.0}
 
 
@@ -136,6 +205,7 @@ def estimate_footprint(cfg: ModelConfig, shape: ShapeConfig, flow: FlowConfig,
     FSDP-sharded over ``devices``; activation transients shrink with
     microbatching, remat strength, and bf16 storage.
     """
+    devices = _effective_devices(cfg, flow, devices)
     n = count_params(cfg)
     adt = _act_dtype_bytes(flow)
     if cfg.family == "cnn":
@@ -181,15 +251,18 @@ def estimate_step_seconds(cfg: ModelConfig, shape: ShapeConfig,
                           device: str = "v5e") -> Dict[str, float]:
     """Roofline step-time prediction (rules 1–2 — the bandwidth roof).
 
-    Candidates are ranked by ``max(compute, memory)`` time; passes that are
-    off inflate the byte side the way their FPGA counterparts did (no cached
-    writes -> read-modify-write per K step; no fusion -> intermediate arrays
-    round-trip HBM; fp32 -> half MXU rate, double bytes).
+    Candidates are ranked by ``max(compute, memory, comm)`` time; passes that
+    are off inflate the byte side the way their FPGA counterparts did (no
+    cached writes -> read-modify-write per K step; no fusion -> intermediate
+    arrays round-trip HBM; fp32 -> half MXU rate, double bytes).  A mesh
+    split adds the ICI roof: the all-gather/reduce-scatter/all-reduce bytes
+    its partition decisions imply (:func:`estimate_comm_bytes`).
     """
     if device not in DEVICE_PRESETS:
         raise ValueError(f"unknown device {device!r}; "
                          f"known: {sorted(DEVICE_PRESETS)}")
     dev = DEVICE_PRESETS[device]
+    devices = _effective_devices(cfg, flow, devices)
     flops = model_flops(cfg, shape) + attention_flops(cfg, shape)
     peak = dev["bf16_flops"] * (1.0 if flow.precision == "bf16" else 0.5)
     adt = _act_dtype_bytes(flow)
@@ -210,6 +283,9 @@ def estimate_step_seconds(cfg: ModelConfig, shape: ShapeConfig,
                   "nested": 1.5}.get(flow.remat, 4.0 / 3.0)
     compute_s = flops / (peak * devices)
     memory_s = bytes_ / (dev["hbm_bw"] * devices)
-    return {"compute_s": compute_s, "memory_s": memory_s,
-            "step_s": max(compute_s, memory_s),
-            "bound": "compute" if compute_s >= memory_s else "memory"}
+    comm_s = estimate_comm_bytes(cfg, shape, flow)["total"] / dev["ici_bw"]
+    step_s = max(compute_s, memory_s, comm_s)
+    bound = ("compute" if step_s == compute_s
+             else "memory" if step_s == memory_s else "comm")
+    return {"compute_s": compute_s, "memory_s": memory_s, "comm_s": comm_s,
+            "step_s": step_s, "bound": bound}

@@ -1,11 +1,12 @@
 from repro.core.passes import (  # noqa: F401
-    backends, caching, folding, fusion, precision, streaming, tiling)
+    backends, caching, folding, fusion, precision, sharding, streaming,
+    tiling)
 
 
 def default_passes():
     """The default pipeline's pass instances, in execution order."""
     from repro.core.passmanager import GraphBuildPass
     return [GraphBuildPass(), fusion.FusionPass(), streaming.StreamingPass(),
-            folding.FoldingPass(), tiling.TilingPass(),
-            precision.PrecisionPass(), caching.CachingPass(),
-            backends.KernelSelectPass()]
+            folding.FoldingPass(), sharding.ShardingPass(),
+            tiling.TilingPass(), precision.PrecisionPass(),
+            caching.CachingPass(), backends.KernelSelectPass()]

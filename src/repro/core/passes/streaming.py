@@ -49,18 +49,20 @@ def run(graph, cfg, flow, mesh_axes: Tuple[str, ...] = ()) -> StreamPlan:
         mode = "pipelined" if small else "folded"
     else:
         mode = flow.mode
-    pp = flow.pp_axis if flow.pp_axis in mesh_axes else None
+    split = dict(flow.mesh_split) if flow.mesh_split else {}
+    known_axes = set(mesh_axes) | set(split)
+    pp = flow.pp_axis if flow.pp_axis in known_axes else None
     n_stages = 1
     boundaries: Tuple[int, ...] = (0,)
     if pp is not None:
-        # split layer blocks evenly over the pp axis (stage per pod)
-        import jax
-        n_stages = dict(zip(mesh_axes, ())) or 2  # resolved by caller's mesh
-        n_stages = 2
+        # split layer blocks evenly over the pp axis (stage per pod); the
+        # stage count comes from the flow's mesh factorization when known
+        n_stages = split.get(pp, 2)
         layer_idx = [i for i, b in enumerate(graph.blocks)
                      if b.kind.endswith("layer") or b.kind == "cnn_block"]
         per = max(1, len(layer_idx) // n_stages)
-        boundaries = tuple(layer_idx[i * per] for i in range(n_stages))
+        boundaries = tuple(layer_idx[min(i * per, len(layer_idx) - 1)]
+                           for i in range(n_stages)) if layer_idx else (0,)
     mb = max(flow.microbatches, n_stages if pp else flow.microbatches)
     return StreamPlan(mode, pp, n_stages, mb, boundaries)
 

@@ -152,6 +152,7 @@ class PassManager:
             cfg, flow, shape, ctx.graph, ctx.artifacts["units"],
             ctx.artifacts["tiles"], ctx.artifacts["stream"],
             ctx.artifacts["prec"], ctx.artifacts["cache"], rules,
+            sharding=ctx.artifacts.get("sharding"),
             kernels=ctx.artifacts.get("kernels", {}),
             pass_stats=ctx.stats, pass_timings_ms=ctx.timings_ms,
             trace=ctx.trace)

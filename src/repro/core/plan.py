@@ -28,6 +28,9 @@ class ExecutionPlan:
     prec: precision.PrecisionPlan
     cache: caching.CachingPlan
     rules: Optional[Any] = None      # ShardingRules (distributed runtime)
+    # partitioning decisions (ShardingPass): mesh factorization, per-param
+    # PartitionSpecs, pipeline-stage assignment
+    sharding: Optional[Any] = None   # passes.sharding.ShardingPlan
     # per-op kernel-backend resolution (KernelSelectPass / KernelRegistry)
     kernels: Dict[str, str] = field(default_factory=dict)
     # pass-pipeline instrumentation (PassManager)
@@ -71,6 +74,8 @@ class ExecutionPlan:
             ", ".join(f"{u.reps}x{u.period}" for u in folded) + ")",
             f"  tiles: {self.tiles}",
         ]
+        if self.sharding is not None:
+            lines.append(self.sharding.describe_line())
         if self.kernels:
             from repro.kernels.registry import REGISTRY
             accel = [op for op in REGISTRY.accelerated_ops()

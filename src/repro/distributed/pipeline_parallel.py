@@ -15,7 +15,7 @@ Applies to plans whose layers fold into a single scan group with
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,16 +36,32 @@ def _single_fold_unit(plan: ExecutionPlan):
 
 
 def make_pipeline_loss(plan: ExecutionPlan, mesh, n_microbatches: int,
-                       pp_axis: str = "pod"):
+                       pp_axis: Optional[str] = None):
     """Returns loss(params, batch) running a GPipe schedule over ``pp_axis``.
 
     params uses the standard lowering layout; the folded group's stacked
-    params are sharded over ``pp_axis`` on their layer dim.
+    params are sharded over ``pp_axis`` on their layer dim.  The stage
+    assignment comes from the plan's recorded ShardingPlan when present
+    (``plan.sharding`` — the ShardingPass's decision); ``pp_axis`` and the
+    stage count then must agree with the runtime mesh.
     """
     graph = plan.graph
     unit = _single_fold_unit(plan)
     ukey = lowering.unit_key(graph, unit)
+    sp = plan.sharding
+    if pp_axis is None:
+        pp_axis = sp.pp_axis if sp is not None and sp.pp_axis else "pod"
     n_stages = mesh.shape[pp_axis]
+    if sp is not None and sp.pp_axis == pp_axis and sp.n_stages > 1:
+        assert sp.n_stages == n_stages, (
+            f"plan assigned {sp.n_stages} pipeline stages but mesh axis "
+            f"{pp_axis!r} has size {n_stages}")
+        assert len(sp.stage_of_layer) == unit.reps, (sp.stage_of_layer,
+                                                     unit.reps)
+        # the GPipe layout below shards the stacked layer dim evenly over
+        # pp_axis — exactly the contiguous equal runs the pass assigns
+        per = unit.reps // n_stages
+        assert sp.stage_of_layer == tuple(r // per for r in range(unit.reps))
     assert unit.reps % n_stages == 0, (unit.reps, n_stages)
     nmb = n_microbatches
     cfg = plan.cfg

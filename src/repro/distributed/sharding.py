@@ -1,50 +1,27 @@
-"""Divisibility-aware sharding solver.
+"""Runtime binding of the plan's sharding decisions to a live ``jax.Mesh``.
 
-Maps ParamSpec dimension *roles* onto mesh axes:
-
-* **tp ("model")** — d_ff (Megatron column/row FFN), vocab (embedding/head),
-  expert (EP, when num_experts divides the axis), heads (storage sharding of
-  attention projections; compute-level attention parallelism is context
-  parallelism over the sequence, which works for every head count).
-* **fsdp (dp axes)** — the largest remaining divisible dim (d_model first):
-  ZeRO-3-style parameter + optimizer-state sharding; XLA inserts the
-  all-gathers at use and reduce-scatters the gradients.
-
-Activations are constrained by role tuples at strategic points (attention
-entry/exit = context parallelism, MoE dispatch buffers, logits).  Every
-assignment checks divisibility — jit rejects uneven shards — and never uses
-a mesh axis twice in one spec.
+The *solver* (role -> mesh-axis assignment with divisibility checks) lives
+in :mod:`repro.core.passes.sharding` — partitioning is a compilation
+decision the ``ShardingPass`` records on the ``ExecutionPlan``
+(``plan.sharding``).  ``ShardingRules`` here turns those decisions into
+``NamedSharding`` trees and ``with_sharding_constraint`` calls against a
+concrete mesh: when the plan carries a ``ShardingPlan`` whose factorization
+matches the mesh, the recorded per-param ``PartitionSpec``s are used
+verbatim; otherwise (legacy plans, ad-hoc meshes) the same solver is run on
+the fly, so both paths make identical decisions.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.graph import ParamSpec
-
-# role -> priority order for the tp axis (first divisible wins).
-# "heads_in" is deliberately absent: the attention out-projection stays
-# row-local (its input is already sequence-sharded by context parallelism).
-TP_ROLES = ("expert", "d_ff", "vocab", "heads")
-# role -> priority for fsdp
-FSDP_ROLES = ("d_model", "heads", "heads_in", "d_ff", "vocab", "expert",
-              "layers")
-
-ACT_ROLE_AXES = {
-    "batch": "__dp__",
-    "seq_cp": "__tp__",      # context-parallel sequence sharding
-    "kv_len": "__tp__",      # decode: KV cache length over tp
-    "vocab": "__tp__",
-    "d_ff": "__tp__",
-    "expert": "__tp__",
-    "heads": "__tp__",
-    "gather": None,          # force replication (KV all-gather)
-    "none": None,
-    "seq": None,
-}
+from repro.core.passes.sharding import (  # noqa: F401  (re-exported: the
+    ACT_ROLE_AXES, FSDP_ROLES, TP_ROLES,  # tables' historical home is here)
+    solve_act_pspec, solve_param_pspec)
 
 
 @dataclass
@@ -64,33 +41,16 @@ class ShardingRules:
     def tp_size(self) -> int:
         return self.mesh.shape[self.tp] if self.tp else 1
 
+    @property
+    def _axis_sizes(self) -> Dict[str, int]:
+        return {a: int(self.mesh.shape[a]) for a in self.mesh.axis_names}
+
     # -- parameters ---------------------------------------------------------
     def param_pspec(self, spec: ParamSpec, shape: Tuple[int, ...],
                     stacked: bool) -> P:
         roles = (("layers",) + spec.roles) if stacked else spec.roles
-        assert len(roles) == len(shape), (spec.name, roles, shape)
-        entries: list = [None] * len(roles)
-        used_tp = self.tp is None
-        for want in TP_ROLES:
-            if used_tp:
-                break
-            for i, r in enumerate(roles):
-                if r == want and shape[i] % self.tp_size == 0:
-                    entries[i] = self.tp
-                    used_tp = True
-                    break
-        dp_ent = self.dp if len(self.dp) > 1 else self.dp[0]
-        for want in FSDP_ROLES:
-            done = False
-            for i, r in enumerate(roles):
-                if (r == want and entries[i] is None
-                        and shape[i] % self.dp_size == 0):
-                    entries[i] = dp_ent
-                    done = True
-                    break
-            if done:
-                break
-        return P(*entries)
+        return solve_param_pspec(roles, shape, self.dp, self.tp,
+                                 self._axis_sizes)
 
     def param_sharding(self, spec: ParamSpec, shape: Tuple[int, ...],
                        stacked: bool) -> NamedSharding:
@@ -117,26 +77,8 @@ class ShardingRules:
     # -- activations --------------------------------------------------------
     def act_pspec(self, roles: Tuple[str, ...],
                   shape: Tuple[int, ...]) -> P:
-        entries = []
-        used = set()
-        for i, r in enumerate(roles):
-            ax = ACT_ROLE_AXES.get(r)
-            if ax == "__dp__":
-                ent = self.dp if len(self.dp) > 1 else self.dp[0]
-                flat = self.dp
-            elif ax == "__tp__":
-                ent = self.tp
-                flat = (self.tp,)
-            else:
-                ent = None
-                flat = ()
-            if ent is not None and (set(flat) & used
-                                    or shape[i] % self._axis_size(ent) != 0):
-                ent = None
-                flat = ()
-            used |= set(flat)
-            entries.append(ent)
-        return P(*entries)
+        return solve_act_pspec(roles, shape, self.dp, self.tp,
+                               self._axis_sizes)
 
     def constrain_act(self, x, roles: Tuple[str, ...]):
         if len(roles) != x.ndim:
@@ -146,15 +88,33 @@ class ShardingRules:
             x, NamedSharding(self.mesh, ps))
 
     # -- whole-tree helpers ---------------------------------------------------
+    def _plan_specs(self, plan) -> Optional[Dict[str, P]]:
+        """The ShardingPass's recorded per-param specs, when they were solved
+        for this mesh's factorization (else None -> solve on the fly)."""
+        sp = getattr(plan, "sharding", None)
+        if sp is None or not sp.param_specs:
+            return None
+        if dict(sp.mesh.axes) != self._axis_sizes:
+            return None                     # plan solved for another mesh
+        return sp.param_specs
+
     def params_shardings(self, plan) -> Dict[str, Any]:
-        """Sharding tree matching the params pytree of ``plan``."""
+        """Sharding tree matching the params pytree of ``plan`` — read from
+        the plan's recorded ShardingPlan when available."""
         from repro.core.lowering import param_specs_tree, param_shapes
-        specs = param_specs_tree(plan)
         shapes = param_shapes(plan)
-        return jax.tree.map(
-            lambda sv, sh: self.param_sharding(sv[0], sh.shape, sv[1]),
-            specs, shapes, is_leaf=lambda v: isinstance(v, tuple)
-            and len(v) == 2 and isinstance(v[1], bool))
+        specs = param_specs_tree(plan)
+        recorded = self._plan_specs(plan) or {}
+
+        def one(top, leaf):
+            ps = recorded.get(f"{top}/{leaf}")
+            if ps is None:                 # not recorded: solve on the fly
+                sv, sh = specs[top][leaf], shapes[top][leaf]
+                ps = self.param_pspec(sv[0], sh.shape, sv[1])
+            return NamedSharding(self.mesh, ps)
+
+        return {top: {leaf: one(top, leaf) for leaf in leaves}
+                for top, leaves in shapes.items()}
 
     def batch_sharding(self, batch_shapes: Dict[str, Any]) -> Dict[str, Any]:
         out = {}

@@ -36,8 +36,9 @@ from repro.configs import SHAPES, get_config, get_smoke
 from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
 from repro.core import lowering
 from repro.core.plan import ExecutionPlan, _build_plan
+from repro.distributed.meshspec import MeshSpec
 
-__all__ = ["compile", "CompiledModel"]
+__all__ = ["compile", "CompiledModel", "MeshSpec"]
 
 
 class _nullcontext:
@@ -229,6 +230,97 @@ class CompiledModel:
 
         return self._stage(f"generate_fori[{S}+{steps}]", build)(params, batch)
 
+    # -- measured-time validation --------------------------------------------
+    def _measure_inputs(self, seed: int = 0) -> Dict[str, Any]:
+        """Concrete random inputs matching the cell's abstract shapes."""
+        import numpy as np
+        from repro.core.dse import abstract_inputs
+        rng = np.random.RandomState(seed)
+        out = {}
+        for k, sds in abstract_inputs(self.cfg, self.shape).items():
+            if sds.dtype == jnp.int32:
+                out[k] = jnp.asarray(
+                    rng.randint(0, self.cfg.vocab_size, sds.shape), jnp.int32)
+            else:
+                out[k] = jnp.asarray(rng.randn(*sds.shape), sds.dtype)
+        return out
+
+    def measure(self, stage: Optional[str] = None, iters: int = 3, *,
+                seed: int = 0) -> Dict[str, Any]:
+        """Wall-clock one stage of this compiled cell: AOT-compile it
+        (recording ``per_device_bytes`` from ``memory_analysis()``), run it
+        once to warm up, then time ``iters`` steps and report the best and
+        mean.  ``stage`` defaults to the shape cell's kind (train -> the
+        donated train step, prefill/decode -> the serving stages).  This is
+        the DSE's measured-time validator (``validate="measure"``) — the
+        on-device confirmation the paper got from hours of place & route.
+        """
+        stage = stage if stage is not None else self.shape.kind
+        B = self.shape.global_batch
+        batch = self._measure_inputs(seed)
+        if stage == "train":
+            from repro.optim.adamw import AdamW
+            from repro.train.trainer import make_train_step
+            opt = AdamW()
+            raw = make_train_step(self.plan, opt,
+                                  microbatches=max(self.flow.microbatches, 1))
+            params = self.init_params(jax.random.key(seed))
+            args = [params, opt.init(params), batch]
+            fn, donate = raw, (0, 1)
+            def carry(out, args):      # re-feed donated params/opt state
+                return [out[0], out[1], args[2]]
+        elif stage == "decode":
+            apply = self.apply
+            params = self.init_params(jax.random.key(seed))
+            state = self.init_state(B)
+            tok = batch["tokens"].reshape(B, 1)
+
+            def fn(p, b, st, i):
+                logits, new_state, _ = apply(p, b, state=st, cache_index=i,
+                                             mode="decode")
+                return logits, new_state
+            args = [params, {"tokens": tok}, state, jnp.int32(0)]
+            donate = (2,)
+            def carry(out, args):
+                return [args[0], args[1], out[1], args[3] + 1]
+        elif stage == "prefill":
+            apply = self.apply
+            params = self.init_params(jax.random.key(seed))
+            fn = lambda p, b: apply(p, b, mode="prefill")[0]  # noqa: E731
+            args = [params, batch]
+            donate = ()
+            def carry(out, args):
+                return args
+        else:
+            raise ValueError(f"unknown stage {stage!r}; "
+                             "expected train | prefill | decode")
+
+        from repro.core.dse import per_device_bytes
+        t0 = time.perf_counter()
+        with self._mesh_ctx():
+            compiled = jax.jit(fn, donate_argnums=donate).lower(
+                *args).compile()
+        compile_s = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        args = carry(compiled(*args), args)          # warm-up (not timed)
+        jax.block_until_ready(args)
+        times = []
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            out = compiled(*args)
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+            args = carry(out, args)
+        rec = {"stage": stage, "iters": len(times),
+               "compile_s": round(compile_s, 4),
+               "measured_step_s": min(times),
+               "mean_step_s": sum(times) / len(times),
+               "per_device_bytes": per_device_bytes(mem),
+               "temp_bytes": mem.temp_size_in_bytes,
+               "argument_bytes": mem.argument_size_in_bytes}
+        self.stats.setdefault("measure", {})[stage] = rec
+        return rec
+
     # -- reporting -----------------------------------------------------------
     def describe(self, stats: bool = False) -> str:
         """The flow report: plan summary (passes, units, tiles, kernel
@@ -267,10 +359,24 @@ def _resolve_shape(shape: Union[str, ShapeConfig]) -> ShapeConfig:
     return shape
 
 
-def _rules_for(mesh):
+def _rules_for(mesh, flow: FlowConfig):
+    from repro.core.passes.sharding import split_roles
     from repro.distributed.sharding import ShardingRules
-    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    return ShardingRules(mesh, dp=dp, tp="model")
+    split = tuple((a, int(mesh.shape[a])) for a in mesh.axis_names)
+    dp, tp, _pp = split_roles(flow, split)
+    return ShardingRules(mesh, dp=dp or ("data",), tp=tp)
+
+
+def _resolve_mesh(mesh) -> Tuple[Optional[Any], Optional[MeshSpec]]:
+    """(runtime jax Mesh, MeshSpec) from any accepted mesh spelling.  A
+    MeshSpec / axis-size dict is bound to the local devices; a live Mesh is
+    passed through."""
+    if mesh is None:
+        return None, None
+    spec = MeshSpec.of(mesh)
+    if hasattr(mesh, "devices"):            # already a live jax Mesh
+        return mesh, spec
+    return spec.build(), spec
 
 
 def compile(arch_or_cfg: Union[str, ModelConfig],
@@ -279,6 +385,7 @@ def compile(arch_or_cfg: Union[str, ModelConfig],
             backend: str = "auto",
             autotune: bool = False,
             mesh=None,
+            validate: str = "compile",
             smoke: bool = False) -> CompiledModel:
     """Compile one (model, shape) cell through the whole flow.
 
@@ -290,10 +397,18 @@ def compile(arch_or_cfg: Union[str, ModelConfig],
         ``pallas_interpret``).  A non-``auto`` value overrides the flow's
         ``kernel_backend``; the default keeps the flow's own setting.
       autotune: run the design-space explorer (estimator-pruned,
-        compile-validated; results are cached per (cfg, shape, flow)
+        compile-validated; results are cached per (cfg, shape, flow, mesh)
         fingerprint) and compile the winning flow.
-      mesh: a jax Mesh for the distributed runtime; sharding rules are
-        derived from its axis names (``model`` TP, ``data``/``pod`` DP).
+      mesh: the device mesh — a :class:`MeshSpec`, an axis-size dict
+        (``{"data": 2, "model": 2}``), or a live jax Mesh.  The factorization
+        is recorded on the flow (``mesh_split``), the ShardingPass writes the
+        partitioning decisions onto the plan, and the runtime binds them via
+        ShardingRules (``model`` TP, other axes DP, ``flow.pp_axis`` PP).
+      validate: with ``autotune``, how the top-k survivors are confirmed:
+        ``"compile"`` (lower+compile+memory_analysis, the default) or
+        ``"measure"`` (AOT-compile *and* wall-clock the stage via
+        :meth:`CompiledModel.measure`, ranking survivors by measured step
+        time).
       smoke: with a string arch, select the reduced (CPU-runnable) config.
     """
     cfg = _resolve_cfg(arch_or_cfg, smoke)
@@ -301,27 +416,38 @@ def compile(arch_or_cfg: Union[str, ModelConfig],
     flow = flow if flow is not None else FlowConfig(mode="folded")
     if backend != "auto" and backend != flow.kernel_backend:
         flow = dataclasses.replace(flow, kernel_backend=backend)
+    if validate not in ("compile", "measure"):
+        raise ValueError(f"unknown validate mode {validate!r}; "
+                         "expected 'compile' | 'measure'")
+
+    mesh_obj, mesh_spec = _resolve_mesh(mesh)
+    if mesh_spec is not None and flow.mesh_split != mesh_spec.axes:
+        flow = dataclasses.replace(flow, mesh_split=mesh_spec.axes)
 
     explore_result = None
     t0 = time.perf_counter()
     if autotune:
         from repro.core import dse
-        n_dev = int(mesh.devices.size) if mesh is not None else 1
+        n_dev = mesh_spec.size if mesh_spec is not None else 1
+        if validate == "measure":
+            validator = dse.measure_validator(cfg, shape, mesh=mesh_obj)
+        else:
+            validator = dse.compile_validator(cfg, shape)
         explore_result = dse.explore(
-            cfg, shape, flow, devices=n_dev,
-            validator=dse.compile_validator(cfg, shape))
+            cfg, shape, flow, devices=n_dev, validator=validator,
+            rank_measured=validate == "measure")
         flow = explore_result.best.flow
 
     rules = None
     mesh_axes: Tuple[str, ...] = ()
-    if mesh is not None:
-        rules = _rules_for(mesh)
-        mesh_axes = tuple(mesh.axis_names)
+    if mesh_obj is not None:
+        rules = _rules_for(mesh_obj, flow)
+        mesh_axes = tuple(mesh_obj.axis_names)
 
-    if explore_result is not None and mesh is None:
+    if explore_result is not None and mesh_obj is None:
         plan = explore_result.plan          # already built for the best flow
     else:
         plan = _build_plan(cfg, flow, shape, mesh_axes=mesh_axes, rules=rules)
     build_s = time.perf_counter() - t0
-    return CompiledModel(plan, mesh=mesh, explore_result=explore_result,
+    return CompiledModel(plan, mesh=mesh_obj, explore_result=explore_result,
                          build_s=build_s)

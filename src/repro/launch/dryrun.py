@@ -210,8 +210,11 @@ def main():
                     records[flow] = run_cell(a, s, mesh=mesh, flow=flow)
                     return records[flow]["memory"]
 
+                # the production mesh is fixed here: pin its factorization
+                # (the DSE still searches every other pass dimension)
                 er = dse.explore(get_config(a), SHAPES[s], base_flow,
-                                 devices=n_dev, validator=validator)
+                                 devices=n_dev, mesh=mesh,
+                                 validator=validator)
                 print(er.describe())
                 r = records.get(er.best.flow) or run_cell(
                     a, s, multi_pod=mp, mesh=mesh, flow=er.best.flow)

@@ -1,23 +1,26 @@
-"""Production mesh construction.
+"""Production mesh construction — thin wrappers over :class:`MeshSpec`.
 
-A function (not a module-level constant) so importing never touches jax
-device state.  Single pod: (16, 16) = 256 chips, axes (data, model).
-Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model); the pod axis
-carries either extra data parallelism (default) or the pipeline dimension
-(streaming mode — the paper's channels become pod→pod ppermutes).
+The topology lives in the spec constants (compile-time values the flow and
+the DSE consume); only ``build()`` touches jax device state, so importing
+this module never initializes devices.  Single pod: (16, 16) = 256 chips,
+axes (data, model).  Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data,
+model); the pod axis carries either extra data parallelism (default) or the
+pipeline dimension (streaming mode — the paper's channels become pod→pod
+ppermutes).
 """
 from __future__ import annotations
 
-import jax
+from repro.distributed.meshspec import MeshSpec
+
+PRODUCTION_SPEC = MeshSpec((("data", 16), ("model", 16)))
+MULTI_POD_SPEC = MeshSpec((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return (MULTI_POD_SPEC if multi_pod else PRODUCTION_SPEC).build()
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-grade multi-device tests (requires the host
     platform device count to be raised in a subprocess)."""
-    return jax.make_mesh(shape, axes)
+    return MeshSpec(tuple(zip(axes, shape))).build()

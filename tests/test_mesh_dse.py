@@ -1,0 +1,276 @@
+"""Mesh-aware DSE tests: dp/tp/pp factorizations as search dimensions,
+divisibility rejection (uneven shards never survive pruning), determinism of
+the chosen factorization, mesh-topology cache fingerprinting, and the
+measured-time validation path (CompiledModel.measure).  Multi-device smoke
+runs live in test_distributed.py (subprocess with forced host devices)."""
+import dataclasses
+
+import pytest
+
+from repro import flow as rflow
+from repro.configs import get_config, get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig, TuningConfig
+from repro.core import dse
+from repro.core.estimator import estimate_comm_bytes, estimate_step_seconds
+from repro.core.passes.sharding import (enumerate_mesh_splits, split_roles,
+                                        split_rejection_reason)
+from repro.distributed.meshspec import MeshSpec
+
+SMOKE_TRAIN = ShapeConfig("smoke", "train", 16, 4)
+TINY_TRAIN = ShapeConfig("tiny", "train", 16, 2)
+
+
+# ---------------------------------------------------------------------------
+# MeshSpec + factorization enumeration
+# ---------------------------------------------------------------------------
+
+def test_meshspec_normalizes_every_spelling():
+    s1 = MeshSpec.of({"data": 2, "model": 2})
+    s2 = MeshSpec.of((("data", 2), ("model", 2)))
+    s3 = MeshSpec.of(s1)
+    assert s1 == s2 == s3
+    assert s1.size == 4 and s1.names == ("data", "model")
+    assert s1.describe() == "data:2,model:2"
+    with pytest.raises(TypeError):
+        MeshSpec.of(42)
+    with pytest.raises(ValueError):
+        MeshSpec((("data", 2), ("data", 2)))
+
+
+def test_enumerate_mesh_splits_covers_factorizations():
+    splits = enumerate_mesh_splits(4)
+    assert splits[0] == (("data", 4), ("model", 1))   # pure DP first
+    assert (("data", 2), ("model", 2)) in splits
+    assert (("data", 1), ("model", 4)) in splits
+    assert len(splits) == 3
+    with_pp = enumerate_mesh_splits(8, pp_axis="pod")
+    assert any(dict(s).get("pod") == 2 for s in with_pp)
+    assert all(MeshSpec.of(s).size == 8 for s in with_pp)
+    # the enumerator emits the flow's own axis names
+    named = enumerate_mesh_splits(4, dp_axis="batch", tp_axis="mp",
+                                  pp_axis="stage")
+    assert all(set(dict(s)) <= {"batch", "mp", "stage"} for s in named)
+    # no tp axis: everything lands on dp
+    assert enumerate_mesh_splits(4, tp_axis=None) == ((("data", 4),),)
+
+
+def test_split_roles_follow_flow_convention():
+    flow = FlowConfig(mode="folded")
+    dp, tp, pp = split_roles(flow, (("data", 2), ("model", 2)))
+    assert (dp, tp, pp) == (("data",), "model", None)
+    # size-1 tp degenerates; the axis then carries data parallelism
+    dp, tp, pp = split_roles(flow, (("data", 4), ("model", 1)))
+    assert (dp, tp, pp) == (("data", "model"), None, None)
+    flow_pp = dataclasses.replace(flow, pp_axis="pod")
+    dp, tp, pp = split_roles(flow_pp, (("pod", 2), ("data", 2), ("model", 2)))
+    assert (dp, tp, pp) == (("data",), "model", "pod")
+
+
+# ---------------------------------------------------------------------------
+# divisibility rejection (the paper's even-division rule, across devices)
+# ---------------------------------------------------------------------------
+
+def test_split_rejection_rejects_uneven_shards():
+    cfg = get_smoke("llama3.2-1b")          # d_ff=192, padded vocab 256
+    assert split_rejection_reason(cfg, SMOKE_TRAIN, FlowConfig(mode="folded"),
+                        (("data", 2), ("model", 2))) is None
+    # batch 4 cannot shard over dp=8
+    assert "batch" in split_rejection_reason(cfg, SMOKE_TRAIN, FlowConfig(mode="folded"),
+                                   (("data", 8), ("model", 1)))
+    # CNNs have no tp dimension
+    assert "tp" in split_rejection_reason(get_config("lenet5"), SMOKE_TRAIN,
+                                FlowConfig(mode="folded"),
+                                (("data", 1), ("model", 2)))
+    # pp needs an evenly divisible layer stack (smoke llama: 3 layers)
+    flow_pp = FlowConfig(mode="folded", pp_axis="pod")
+    assert "layers" in split_rejection_reason(cfg, SMOKE_TRAIN, flow_pp,
+                                    (("pod", 2), ("data", 2), ("model", 1)))
+    # tp is viable as soon as ANY tp-shardable dim divides (the solver
+    # shards the first divisible role) — 4 heads divide even when d_ff/vocab
+    # don't; tp=5 divides nothing
+    assert split_rejection_reason(cfg, SMOKE_TRAIN, FlowConfig(mode="folded"),
+                        (("data", 1), ("model", 4))) is None
+    assert "divides none" in split_rejection_reason(
+        cfg, SMOKE_TRAIN, FlowConfig(mode="folded"),
+        (("data", 1), ("model", 5)))
+
+
+def test_all_splits_rejected_falls_back_to_best_effort():
+    """A CNN on 8 devices has no fully-even split (tp idles, batch 2 < dp);
+    the screen must readmit everything instead of failing the search — the
+    solver simply leaves unusable axes unsharded."""
+    cfg = get_config("lenet5")
+    r = dse.explore(cfg, TINY_TRAIN, devices=8, use_cache=False)
+    assert r.best.flow.mesh_split is not None
+    assert r.candidates and r.n_rejected == 0
+    assert "sharding:" in r.plan.describe()
+
+
+def test_uneven_shards_never_survive_pruning():
+    """With batch 2 on 8 devices only dp<=2 splits are viable; every pruned
+    candidate's split must shard the batch evenly."""
+    cfg = get_smoke("llama3.2-1b")
+    r = dse.explore(cfg, TINY_TRAIN, devices=8, use_cache=False)
+    assert r.n_rejected > 0
+    for c in r.candidates:
+        split = c.flow.mesh_split
+        assert split is not None
+        dp_axes, _tp, _pp = split_roles(c.flow, split)
+        sizes = dict(split)
+        dp = 1
+        for a in dp_axes:
+            dp *= sizes.get(a, 1)
+        assert TINY_TRAIN.global_batch % dp == 0, split
+    assert r.best.flow.mesh_split is not None
+
+
+# ---------------------------------------------------------------------------
+# the explorer over mesh factorizations
+# ---------------------------------------------------------------------------
+
+def test_mesh_split_is_a_tunable_dimension():
+    cfg = get_smoke("llama3.2-1b")
+    flow = dataclasses.replace(
+        FlowConfig(mode="folded"),
+        tuning=TuningConfig(mesh_devices=4))
+    space = dse.tunable_space(cfg, flow, SMOKE_TRAIN)
+    assert len(space["mesh_split"]) == 3          # 4 = 4x1 | 2x2 | 1x4
+    # an explicit mesh pins the dimension (like a pinned backend)
+    pinned = dataclasses.replace(flow, mesh_split=(("data", 2), ("model", 2)))
+    assert dse.tunable_space(cfg, pinned, SMOKE_TRAIN)["mesh_split"] == \
+        ((("data", 2), ("model", 2)),)
+    # single device: the mesh is not a dimension at all
+    assert "mesh_split" not in dse.tunable_space(
+        cfg, FlowConfig(mode="folded"), SMOKE_TRAIN)
+
+
+def test_explore_mesh_choice_deterministic():
+    cfg = get_smoke("llama3.2-1b")
+    r1 = dse.explore(cfg, SMOKE_TRAIN, devices=4, use_cache=False)
+    r2 = dse.explore(cfg, SMOKE_TRAIN, devices=4, use_cache=False)
+    assert r1.best.flow.mesh_split == r2.best.flow.mesh_split
+    assert r1.best.flow == r2.best.flow
+    assert [c.knobs for c in r1.candidates] == [c.knobs for c in r2.candidates]
+    assert r1.plan.describe() == r2.plan.describe()
+    assert "sharding:" in r1.plan.describe()
+
+
+def test_explore_cache_keys_on_mesh_topology():
+    """Same device count, different topology => different fingerprint: a
+    mesh change in-process must not return a stale plan."""
+    cfg = get_smoke("llama3.2-1b")
+    dse.clear_explore_cache()
+    r1 = dse.explore(cfg, SMOKE_TRAIN, mesh={"data": 2, "model": 2})
+    r2 = dse.explore(cfg, SMOKE_TRAIN, mesh={"data": 4, "model": 1})
+    assert r1 is not r2
+    assert dse.explore_cache_stats() == {"hits": 0, "misses": 2}
+    assert dse.explore(cfg, SMOKE_TRAIN, mesh={"data": 2, "model": 2}) is r1
+    assert dse.explore_cache_stats()["hits"] == 1
+    # and an unmeshed search is yet another entry
+    r3 = dse.explore(cfg, SMOKE_TRAIN)
+    assert r3 is not r1 and r3 is not r2
+
+
+def test_explore_with_pinned_mesh_records_sharding():
+    cfg = get_smoke("llama3.2-1b")
+    r = dse.explore(cfg, SMOKE_TRAIN, mesh={"data": 2, "model": 2},
+                    use_cache=False)
+    assert r.best.flow.mesh_split == (("data", 2), ("model", 2))
+    sp = r.plan.sharding
+    assert sp is not None and sp.dp_size == 2 and sp.tp_size == 2
+    assert sp.param_specs                      # every param got a decision
+
+
+# ---------------------------------------------------------------------------
+# communication-cost term
+# ---------------------------------------------------------------------------
+
+def test_comm_cost_shapes_the_ranking():
+    cfg = get_smoke("llama3.2-1b")
+    flow = FlowConfig(mode="folded")
+    assert estimate_comm_bytes(cfg, SMOKE_TRAIN, flow)["total"] == 0.0
+    dp4 = dataclasses.replace(flow, mesh_split=(("data", 4), ("model", 1)))
+    tp4 = dataclasses.replace(flow, mesh_split=(("data", 1), ("model", 4)))
+    c_dp = estimate_comm_bytes(cfg, SMOKE_TRAIN, dp4)
+    c_tp = estimate_comm_bytes(cfg, SMOKE_TRAIN, tp4)
+    assert c_dp["all_gather"] > 0 and c_dp["reduce_scatter"] > 0
+    assert c_dp["all_reduce"] == 0
+    assert c_tp["all_reduce"] > 0 and c_tp["all_gather"] == 0
+    st = estimate_step_seconds(cfg, SMOKE_TRAIN, dp4)
+    assert st["comm_s"] > 0
+    assert st["step_s"] >= st["comm_s"]
+    # more data parallelism, more gathered bytes per device
+    dp2 = dataclasses.replace(flow, mesh_split=(("data", 2), ("model", 2)))
+    assert c_dp["all_gather"] > \
+        estimate_comm_bytes(cfg, SMOKE_TRAIN, dp2)["all_gather"]
+
+
+# ---------------------------------------------------------------------------
+# measured-time validation (CompiledModel.measure / validate="measure")
+# ---------------------------------------------------------------------------
+
+def test_compiled_model_measure_smoke():
+    cm = rflow.compile("llama3.2-1b", ShapeConfig("m", "prefill", 16, 2),
+                       smoke=True)
+    rec = cm.measure(iters=2)
+    assert rec["stage"] == "prefill" and rec["iters"] == 2
+    assert rec["measured_step_s"] > 0
+    assert rec["mean_step_s"] >= rec["measured_step_s"]
+    assert rec["per_device_bytes"] > 0
+    assert cm.stats["measure"]["prefill"] is rec
+    with pytest.raises(ValueError):
+        cm.measure(stage="nope")
+
+
+def test_explore_ranks_survivors_by_measured_time():
+    cfg = get_smoke("llama3.2-1b")
+    shape = ShapeConfig("m", "prefill", 16, 2)
+    r = dse.explore(cfg, shape,
+                    validator=dse.measure_validator(cfg, shape, iters=1),
+                    top_k=2, rank_measured=True, use_cache=False)
+    assert len(r.validated) == 2               # measured ranking sees all k
+    assert all("measured_step_s" in v for v in r.validated)
+    fitting = [v for v in r.validated if v["fits"]]
+    assert fitting
+    chosen = min(fitting, key=lambda v: v["measured_step_s"])
+    assert r.best.knob_str() == chosen["knobs"]
+
+
+def test_compile_validate_measure_end_to_end():
+    from repro.core import dse as dse_mod
+    dse_mod.clear_explore_cache()
+    cm = rflow.compile("llama3.2-1b", ShapeConfig("m", "prefill", 16, 2),
+                       smoke=True, autotune=True, validate="measure")
+    assert cm.explore_result is not None
+    assert all("measured_step_s" in v for v in cm.explore_result.validated)
+    with pytest.raises(ValueError):
+        rflow.compile("llama3.2-1b", ShapeConfig("m", "prefill", 16, 2),
+                      smoke=True, validate="nope")
+
+
+# ---------------------------------------------------------------------------
+# shard_map compat unification guard (single helper in core/compat.py)
+# ---------------------------------------------------------------------------
+
+def test_shard_map_compat_is_single_sourced():
+    import os
+    import re
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    defs = []
+    for dirpath, _dirs, files in os.walk(root):
+        for f in files:
+            if not f.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, f)
+            with open(path) as fh:
+                src = fh.read()
+            if re.search(r"^def shard_map\(", src, re.M) or \
+                    "jax.experimental.shard_map" in src:
+                defs.append(os.path.relpath(path, root))
+    assert defs == ["core/compat.py"], defs
+    from repro.core import ops_impl
+    from repro.distributed import pipeline_parallel
+    for mod in (ops_impl, pipeline_parallel):
+        import inspect
+        assert "from repro.core.compat import shard_map" in \
+            inspect.getsource(mod), mod.__name__

@@ -11,8 +11,8 @@ from conftest import SMOKE_SHAPE
 
 SERVE = ShapeConfig("bench", "prefill", 64, 8)
 
-EXPECTED_PASSES = ["graph", "fusion", "streaming", "folding", "tiling",
-                   "precision", "caching", "kernels"]
+EXPECTED_PASSES = ["graph", "fusion", "streaming", "folding", "sharding",
+                   "tiling", "precision", "caching", "kernels"]
 
 
 def test_default_pipeline_order():
@@ -35,9 +35,24 @@ def test_every_pass_reports_stats_and_timing():
                       SMOKE_SHAPE)
     assert list(plan.pass_stats) == EXPECTED_PASSES
     for name, st in plan.pass_stats.items():
+        if name == "sharding":        # no mesh on this cell: records a skip
+            assert not st["applied"]
+            continue
         assert st["applied"], name
         assert plan.pass_timings_ms[name] >= 0
     assert len(plan.trace) == len(EXPECTED_PASSES)
+
+
+def test_sharding_pass_applies_with_mesh_split():
+    plan = build_plan(
+        get_smoke("llama3.2-1b"),
+        FlowConfig(mode="folded", mesh_split=(("data", 2), ("model", 2))),
+        SMOKE_SHAPE)
+    st = plan.pass_stats["sharding"]
+    assert st["applied"] and st["dp"] == 2 and st["tp"] == 2
+    assert plan.sharding is not None
+    assert plan.sharding.mesh.size == 4
+    assert plan.pass_timings_ms["sharding"] >= 0
 
 
 def test_skipped_pass_recorded():

@@ -78,6 +78,23 @@ plan[llama3.2-1b x smoke] mode=folded
 {KERNELS}"""
 
 
+def test_lm_plan_golden_sharded():
+    """The ShardingPass's decisions are part of the plan snapshot: the mesh
+    factorization, axis roles, and param-spec census appear as the plan's
+    sharding line."""
+    plan = build_plan(
+        get_smoke("llama3.2-1b"),
+        FlowConfig(mode="folded", mesh_split=(("data", 2), ("model", 2))),
+        SMOKE_TRAIN)
+    assert plan.describe() == f"""\
+plan[llama3.2-1b x smoke] mode=folded
+  passes: fuse=True fold=True tiles=True cw=True prec=bf16
+  units: 3 (1 folded: 3x1)
+  tiles: {{'matmul': (16, 64, 192), 'attention': (16, 16), 'decode_attention': 512, 'conv2d': (8, 128), 'wkv_chunk': 32, 'ce_chunk': 256}}
+  sharding: mesh={{data:2,model:2}} dp=data:2 tp=model:2 pp=- params[tp=7 fsdp=4 repl=0]
+{KERNELS}"""
+
+
 def test_describe_is_deterministic():
     args = (get_config("resnet34"), FlowConfig(mode="auto"), SERVE)
     assert build_plan(*args).describe(stats=True) == \
