@@ -203,6 +203,32 @@ def table8_sharded_vs_unsharded() -> List[Tuple]:
     return rows
 
 
+def table9_serving(concurrencies: Tuple[int, ...] = (1, 4, 16)
+                   ) -> List[Tuple]:
+    """Serving-subsystem throughput/latency: Engine.run (continuous batching
+    over the paged KV pool) at 1/4/16 concurrent requests — tokens/s, p50 and
+    p95 request latency, and the loop's eviction/refill counts."""
+    from repro import flow as rflow
+    from repro.configs.base import ShapeConfig
+    from repro.serving import Engine, EngineConfig, synthetic_requests
+    cfg = get_smoke("llama3.2-1b")
+    cm = rflow.compile(cfg, ShapeConfig("bench_serve", "decode", 64, 4),
+                       FlowConfig(mode="folded", precision="fp32"))
+    params = cm.init_params(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(max_batch=4, max_seq_len=64, block_size=8)
+    eng = Engine(cm, params, ecfg)
+    rows = []
+    for n in concurrencies:
+        reqs = synthetic_requests(n, cfg.vocab_size, prompt_len=8,
+                                  max_new_tokens=8, seed=n)
+        eng.run(reqs)          # warm the tick programs for this concurrency
+        m = eng.run(reqs).metrics
+        rows.append(("llama3.2-1b-smoke", n, m["tokens_per_s"],
+                     m["p50_latency_s"], m["p95_latency_s"],
+                     m["evictions"], m["refills"]))
+    return rows
+
+
 def table5_comparison() -> List[Tuple]:
     """Our optimized flow vs a hand-written jnp/XLA implementation (the
     'TVM/TensorFlow CPU' stand-in)."""

@@ -1,6 +1,7 @@
 """Batched serving: prefill a batch of prompts, decode with donated rolling
-caches, then repeat fully on-device (the autorun analogue) and compare
-throughput.
+caches, repeat fully on-device (the autorun analogue) and compare
+throughput — then serve a request stream through the continuous-batching
+engine (paged KV cache, eviction/refill between ticks).
 
   PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b
 """
@@ -59,6 +60,25 @@ def main():
     print(f"host loop:      {tps / t_host:8.1f} tok/s")
     print(f"on-device loop: {tps / t_dev:8.1f} tok/s (incl. compile)")
     print("sample:", np.asarray(toks)[0].tolist())
+
+    if cfg.attention is not None and not cfg.cross_attention:
+        # continuous batching: 2x oversubscribed request stream through the
+        # paged KV pool — finished sequences evicted, queue refills slots
+        from repro.serving import EngineConfig as ECfg, synthetic_requests
+        # fixed prompt lengths + an exact prompt bucket: on TPU the
+        # flash-attention prefill masks by iota, so the engine (correctly)
+        # refuses left-padded buckets there
+        eng2 = Engine(cm, params, ECfg(
+            max_batch=args.batch,
+            max_seq_len=args.prompt_len + args.steps,
+            prompt_buckets=(args.prompt_len, args.prompt_len + args.steps),
+            block_size=16))
+        reqs = synthetic_requests(2 * args.batch, cfg.vocab_size,
+                                  prompt_len=args.prompt_len,
+                                  max_new_tokens=args.steps,
+                                  vary_lens=False)
+        report = eng2.run(reqs)
+        print(report.describe())
 
 
 if __name__ == "__main__":

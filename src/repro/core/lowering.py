@@ -331,11 +331,17 @@ def _make_apply(plan: ExecutionPlan, head: bool = True):
             h = batch["images"]
         B = h.shape[0]
 
-        def pos_for(x):
+        def pos_for(x, encoder=False):
             # positions for the *current* chain (encoder/decoder lengths differ)
             if x.ndim == 4:                    # images
                 return None
             S = x.shape[1]
+            # explicit per-row positions (serving: left-padded bucketed
+            # prefill, heterogeneous decode positions with the paged cache).
+            # Decoder chains only — encoder chains always keep their arange.
+            p = None if encoder else batch.get("positions")
+            if p is not None and p.ndim == 2 and p.shape[1] == S:
+                return p.astype(jnp.int32)
             if mode == "decode":
                 return jnp.broadcast_to(cache_index, (B, S)).astype(jnp.int32)
             return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
@@ -365,7 +371,9 @@ def _make_apply(plan: ExecutionPlan, head: bool = True):
                     break
                 if mode == "prefill":
                     h = h[:, -1:]
-            env = {"h": h, "positions": pos_for(h), "cross": cross}
+            env = {"h": h, "cross": cross,
+                   "positions": pos_for(
+                       h, encoder=b0.kind.startswith("enc"))}
             if not unit.folded:
                 ctx.state_in = (state or {}).get(ukey, {})
                 ctx.state_out = {}

@@ -344,8 +344,37 @@ def op_attention(ctx: Ctx, op, p, q, k, v, positions):
         return _sdpa(ctx, q, kc, vc, positions, kpos, causal=False,
                      window=None, softcap=softcap)
 
-    # -- decode: append to rolling cache, attend over it -----------------
+    # -- decode: paged (block-table) or rolling cache --------------------
     st = ctx.state_in[skey]
+    if "kp" in st:
+        # paged KV pool (serving subsystem): per-row block tables + lengths
+        # instead of a dense per-request cache.  ``len[b]`` is the position
+        # of the token being decoded; the new K/V land at logical offset
+        # ``len[b]`` of row b's block chain, then attention runs over the
+        # pool through the block table (Pallas gather on TPU, the registered
+        # ref fallback elsewhere).  Free slots park on trash block 0: their
+        # writes are garbage into a block no live request owns.
+        kp, vp, bt, ln = st["kp"], st["vp"], st["bt"], st["len"]
+        bs = kp.shape[1]
+        nblk = bt.shape[1]
+        rows = jnp.arange(B)
+        blk = bt[rows, (ln // bs) % nblk]            # (B,) pool block ids
+        off = ln % bs
+        kp = kp.at[blk, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[blk, off].set(v[:, 0].astype(vp.dtype))
+        ctx.state_out[skey] = {"kp": kp, "vp": vp, "bt": bt,
+                               "len": ln + jnp.int32(1)}
+        kern = plan_kernel(ctx.plan, "paged_decode_attention")
+        if kern is not None:
+            fn, interpret = kern
+            return fn(q, kp, vp, bt, ln, window=window, softcap=softcap,
+                      interpret=interpret)
+        from repro.kernels.registry import REGISTRY
+        ref = REGISTRY.get("paged_decode_attention", "ref").fn
+        return ref(q, kp, vp, bt, ln, window=window, softcap=softcap,
+                   compute_dtype=ctx.compute_dtype)
+
+    # rolling cache path
     kc, vc, pc = st["k"], st["v"], st["pos"]
     C = kc.shape[1]
     idx = ctx.cache_index % C

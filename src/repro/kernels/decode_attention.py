@@ -100,3 +100,99 @@ def decode_attention(q: jax.Array, kc: jax.Array, vc: jax.Array,
 
 def _rup(n, m):
     return (n + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention: gather over block tables (the serving subsystem's
+# KV-pool lookup path)
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, bs: int, nblk: int,
+                  window: Optional[int], softcap: Optional[float],
+                  scale: float):
+    b = pl.program_id(0)
+    jb = pl.program_id(2)
+
+    @pl.when(jb == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G, bs)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    # block j of the table holds token positions [j*bs, (j+1)*bs); the pool
+    # block it maps to was selected by the BlockSpec index_map (scalar
+    # prefetch), so masking is purely positional
+    kpos = jb * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    qpos = lens_ref[b]
+    valid = kpos <= qpos
+    if window:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, :], s, NEG)
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0, :, 0].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(jb == nblk - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                           bt: jax.Array, lens: jax.Array, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """Decode attention over a paged KV pool.
+
+    q: (B, 1, H, D); kp/vp: (NB, bs, KV, D) device-resident block pools;
+    bt: (B, nblk) int32 block table (pool block id per logical block);
+    lens: (B,) int32 current decode position per row (token ``lens[b]`` has
+    just been written at logical offset ``lens[b]``).  Returns (B, 1, H, D).
+
+    Block tables and lengths ride the scalar-prefetch channel
+    (:class:`pltpu.PrefetchScalarGridSpec`): the BlockSpec ``index_map``
+    reads ``bt[b, j]`` to aim each grid step's DMA at the right pool block —
+    the gather never materializes a contiguous per-request cache.
+    """
+    B, _, H, D = q.shape
+    bs, KV = kp.shape[1], kp.shape[2]
+    nblk = bt.shape[1]
+    G = H // KV
+    qt = q.reshape(B, KV, G, D)
+    kern = functools.partial(_paged_kernel, bs=bs, nblk=nblk, window=window,
+                             softcap=softcap, scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret)(
+        bt.astype(jnp.int32), lens.astype(jnp.int32), qt, kp, vp)
+    return out.reshape(B, 1, H, D)

@@ -39,6 +39,14 @@ def decode_attention(q, kc, vc, pos, qpos, *, window=None, softcap=None,
         block_k=tile or 2048, interpret=interpret)
 
 
+def paged_decode_attention(q, kp, vp, bt, lens, *, window=None, softcap=None,
+                           tile=None, interpret=False):
+    # the paged path has no free tile knob: the physical pool block is the
+    # kernel's KV block (tile accepted for wrapper uniformity)
+    return _da.paged_decode_attention(q, kp, vp, bt, lens, window=window,
+                                      softcap=softcap, interpret=interpret)
+
+
 def conv2d_fused(x, w, *, stride=1, padding="SAME", bn=None, act=None,
                  tile=None, interpret=False):
     # the tiling pass hands (block_h, block_c); a bare int means block_c only

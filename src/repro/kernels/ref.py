@@ -65,6 +65,46 @@ def decode_attention_ref(q, kc, vc, pos, qpos, *, window=None, softcap=None):
     return o.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, kp, vp, bt, lens, *, window=None,
+                               softcap=None, compute_dtype=None):
+    """Reference paged-KV decode attention (the registry's ``ref`` fallback).
+
+    Gathers each row's blocks through its block table into a contiguous
+    (B, nblk*bs, KV, D) view, then mirrors :func:`repro.core.ops_impl._sdpa`'s
+    decode math operation-for-operation so the paged path is *byte-identical*
+    to the rolling-cache reference path when the gathered length matches.
+    """
+    B, _, H, D = q.shape
+    bs, KV = kp.shape[1], kp.shape[2]
+    nblk = bt.shape[1]
+    G = H // KV
+    dt = compute_dtype if compute_dtype is not None else q.dtype
+    C = nblk * bs
+    kc = kp[bt].reshape(B, C, KV, D)          # gather over the block table
+    vc = vp[bt].reshape(B, C, KV, D)
+    kpos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    qpos = lens.reshape(B, 1).astype(jnp.int32)
+    scale = D ** -0.5
+    qf = (q * scale).astype(dt)
+    kf = kc.astype(dt)
+    vf = vc.astype(dt)
+    qg = qf.reshape(B, 1, KV, G, D)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qg, kf,
+                   preferred_element_type=jnp.float32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = kpos[:, None, None, None, :] >= 0
+    valid &= kpos[:, None, None, None, :] <= qpos[:, None, None, :, None]
+    if window:
+        valid &= kpos[:, None, None, None, :] > (
+            qpos[:, None, None, :, None] - window)
+    s = jnp.where(valid, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(dt)
+    o = jnp.einsum("bkgcs,bskd->bckgd", pr, vf,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(dt)
+
+
 def conv2d_fused_ref(x, w, *, stride=1, padding="SAME", bn=None, act=None):
     y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32), (stride, stride),

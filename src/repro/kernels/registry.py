@@ -206,6 +206,14 @@ def _register_builtin():
         supports=lambda window=None, cross=False, **kw:
             window != 0 and not cross)
     REGISTRY.register("decode_attention", "pallas", kops.decode_attention)
+    # paged-KV serving path: the Pallas kernel gathers pool blocks through
+    # the block table (scalar prefetch); the explicit ref entry is the
+    # fallback the serving engine's decode uses off-TPU
+    from repro.kernels.ref import paged_decode_attention_ref
+    REGISTRY.register("paged_decode_attention", "pallas",
+                      kops.paged_decode_attention)
+    REGISTRY.register("paged_decode_attention", "ref",
+                      paged_decode_attention_ref)
     REGISTRY.register(
         "conv2d", "pallas", kops.conv2d_fused,
         supports=lambda groups=1, **kw: groups == 1)

@@ -1,7 +1,21 @@
 """Batched serving driver.
 
+Single-batch generation (the original mode)::
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --batch 4 --prompt-len 32 --steps 16
+
+Continuous-batching replay (the serving subsystem, end to end)::
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --requests requests.jsonl --max-batch 4 --max-seq-len 64
+
+where ``requests.jsonl`` holds one request per line, e.g.
+``{"id": "a", "prompt": [1, 2, 3], "max_new_tokens": 8}`` or
+``{"prompt_len": 12, "seed": 7}`` for a synthetic prompt.  Use
+``--requests synthetic:N`` to replay N generated requests without a file.
+``--serving-autotune`` first searches the decode-cell design space
+(measured-ranked) and pins the winning flow + block size.
 """
 from __future__ import annotations
 
@@ -14,7 +28,45 @@ import numpy as np
 
 from repro import flow as rflow
 from repro.configs.base import FlowConfig, ShapeConfig
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving import (Engine, EngineConfig, load_requests_jsonl,
+                           synthetic_requests)
+
+
+def _run_replay(args) -> None:
+    ecfg = EngineConfig(temperature=args.temperature,
+                        max_batch=args.max_batch,
+                        max_seq_len=args.max_seq_len,
+                        block_size=args.block_size)
+    if args.serving_autotune:
+        from repro.serving.autotune import ServingProfile, autotune_decode
+        prof = ServingProfile(name="cli",
+                              batch_buckets=ecfg.batch_buckets,
+                              max_seq_len=args.max_seq_len,
+                              block_sizes=(8, 16, 32))
+        at = autotune_decode(args.arch, profile=prof, smoke=args.smoke,
+                             validate=args.validate)
+        print(at.describe())
+        cm = at.compile()
+        ecfg = at.engine_config(temperature=args.temperature)
+    else:
+        shape = ShapeConfig("serve", "decode", args.max_seq_len,
+                            args.max_batch)
+        cm = rflow.compile(args.arch, shape, FlowConfig(mode="folded"),
+                           backend=args.backend, smoke=args.smoke)
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params, ecfg)
+    if args.requests.startswith("synthetic:"):
+        n = int(args.requests.split(":", 1)[1])
+        reqs = synthetic_requests(n, cm.cfg.vocab_size,
+                                  prompt_len=args.prompt_len,
+                                  max_new_tokens=args.steps)
+    else:
+        reqs = load_requests_jsonl(args.requests, cm.cfg.vocab_size)
+    report = eng.run(reqs)
+    print(eng.describe())
+    for r in report.results[: args.show]:
+        print(f"  {r.rid}: prompt={r.prompt_len} -> {r.tokens} "
+              f"({r.finish_reason}, {r.latency_s * 1e3:.0f}ms)")
 
 
 def main():
@@ -32,7 +84,29 @@ def main():
     ap.add_argument("--autotune", action="store_true",
                     help="explore the pass design space (estimator-pruned, "
                          "compile-validated) for the decode cell")
+    # continuous-batching replay mode
+    ap.add_argument("--requests", default=None,
+                    help="jsonl file (or synthetic:N) of requests to serve "
+                         "through Engine.run with continuous batching")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots for the replay mode")
+    ap.add_argument("--max-seq-len", type=int, default=128,
+                    help="per-request prompt+generation cap (replay mode)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV-cache block size (replay mode)")
+    ap.add_argument("--serving-autotune", action="store_true",
+                    help="search the decode-cell flow space per batch "
+                         "bucket and pin the winner before replay")
+    ap.add_argument("--validate", default="measure",
+                    choices=("measure", "compile", "none"),
+                    help="autotune ranking mode (--serving-autotune)")
+    ap.add_argument("--show", type=int, default=4,
+                    help="requests to print after a replay")
     args = ap.parse_args()
+
+    if args.requests is not None:
+        _run_replay(args)
+        return
 
     shape = ShapeConfig("cli", "decode", args.prompt_len + args.steps,
                         args.batch)

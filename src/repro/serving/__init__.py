@@ -1,0 +1,17 @@
+"""repro.serving — the production serving subsystem.
+
+* :mod:`repro.serving.engine` — the Engine: continuous-batching ``run``
+  loop, single-batch ``generate`` paths, metrics.
+* :mod:`repro.serving.scheduler` — request queue, admission control, slots.
+* :mod:`repro.serving.kvcache` — paged KV-cache manager (block pool, block
+  tables, prefill packing).
+* :mod:`repro.serving.autotune` — engine-level decode autotune over the DSE.
+"""
+from repro.serving.engine import Engine, EngineConfig, RunReport
+from repro.serving.kvcache import BlockPool, PagedKVCache
+from repro.serving.scheduler import (Request, RequestResult, Scheduler,
+                                     load_requests_jsonl, synthetic_requests)
+
+__all__ = ["Engine", "EngineConfig", "RunReport", "BlockPool", "PagedKVCache",
+           "Request", "RequestResult", "Scheduler", "load_requests_jsonl",
+           "synthetic_requests"]

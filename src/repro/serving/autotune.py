@@ -1,0 +1,247 @@
+"""Engine-level decode autotune: flow search over the serving decode cell.
+
+The ROADMAP's "serving autotune" item: reuse the design-space explorer
+(:mod:`repro.core.dse`) on the *decode* cell the Engine actually runs —
+once per batch bucket of the serving profile — and pin the winning flow.
+The DSE already exposes the pass knobs, the kernel backend, and (given
+``devices > 1`` or a mesh) the dp/tp/pp mesh factorizations; with
+``validate="measure"`` survivors are ranked by measured step time
+(:meth:`CompiledModel.measure`), the serving analogue of the paper's
+confirm-by-place-&-route step.  On top, a pool microbenchmark picks the
+paged KV block size for the profile.
+
+Usage::
+
+    at = autotune_decode("llama3.2-1b", smoke=True,
+                         profile=ServingProfile(batch_buckets=(1, 4),
+                                                max_seq_len=64))
+    eng = at.engine()                                     # or, by hand:
+    cm = at.compile()                                     # pinned best flow
+    eng = Engine(cm, cm.init_params(key), at.engine_config())
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
+from repro.core import dse
+
+
+@dataclass(frozen=True)
+class ServingProfile:
+    """One deployment's decode envelope: what the Engine will be asked to
+    serve, hence what the autotune optimizes for."""
+    name: str = "default"
+    batch_buckets: Tuple[int, ...] = (1, 4, 16)
+    max_seq_len: int = 256
+    block_sizes: Tuple[int, ...] = (8, 16, 32)
+
+    def __post_init__(self):
+        # frozen dataclass: normalize sequence inputs via object.__setattr__
+        object.__setattr__(self, "batch_buckets", tuple(self.batch_buckets))
+        object.__setattr__(self, "block_sizes", tuple(self.block_sizes))
+        if not self.batch_buckets or \
+                tuple(sorted(self.batch_buckets)) != self.batch_buckets:
+            raise ValueError("batch_buckets must be ascending and non-empty")
+        if any(b < 1 for b in self.batch_buckets):
+            raise ValueError("batch_buckets must be positive")
+        if self.max_seq_len < 1:
+            raise ValueError("max_seq_len must be >= 1")
+        if any(b < 1 or b > self.max_seq_len for b in self.block_sizes):
+            raise ValueError("block sizes must be in [1, max_seq_len]")
+
+    def shape_for(self, bucket: int) -> ShapeConfig:
+        return ShapeConfig(f"{self.name}_decode{self.max_seq_len}_b{bucket}",
+                           "decode", self.max_seq_len, bucket)
+
+
+@dataclass
+class DecodeAutotune:
+    """The autotune outcome the Engine pins: the measured-ranked flow per
+    batch bucket (and overall), plus the chosen KV block size."""
+    cfg: ModelConfig
+    profile: ServingProfile
+    per_bucket: Dict[int, Any]          # bucket -> dse.ExploreResult
+    block_size: int
+    block_times_us: Dict[int, float] = field(default_factory=dict)
+    mesh: Any = None
+
+    def _measured_per_token(self, bucket: int) -> Optional[float]:
+        er = self.per_bucket[bucket]
+        ts = [v["measured_step_s"] for v in er.validated
+              if v["knobs"] == er.best.knob_str() and "measured_step_s" in v]
+        return (ts[0] / bucket) if ts else None
+
+    @property
+    def best_bucket(self) -> int:
+        """The bucket whose winner delivers the best measured *per-token*
+        decode time — every bucket's search informs the pin.  Falls back to
+        the largest bucket when nothing was measured (validate != measure)."""
+        scored = [(b, t) for b in self.profile.batch_buckets
+                  if (t := self._measured_per_token(b)) is not None]
+        if not scored:
+            return self.profile.batch_buckets[-1]
+        return min(scored, key=lambda bt: bt[1])[0]
+
+    def flow_for(self, bucket: Optional[int] = None) -> FlowConfig:
+        b = bucket if bucket is not None else self.best_bucket
+        if b not in self.per_bucket:
+            raise KeyError(f"bucket {b} was not tuned "
+                           f"(profile buckets: {self.profile.batch_buckets})")
+        return self.per_bucket[b].best.flow
+
+    def compile(self, bucket: Optional[int] = None):
+        """CompiledModel for the winning flow of ``bucket`` (default: the
+        measured-best per-token bucket) — what the Engine pins.  The decode
+        shape cell always covers the profile's full envelope (largest
+        bucket) so the pinned executable serves every batch bucket."""
+        from repro import flow as rflow
+        b = bucket if bucket is not None else self.best_bucket
+        return rflow.compile(self.cfg,
+                             self.profile.shape_for(
+                                 self.profile.batch_buckets[-1]),
+                             self.flow_for(b), mesh=self.mesh)
+
+    def engine_config(self, **overrides) -> "EngineConfig":
+        """EngineConfig matching the tuned profile (slots = largest bucket,
+        tuned block size, the profile's bucket ladder)."""
+        from repro.serving.engine import EngineConfig
+        kw: Dict[str, Any] = dict(
+            max_batch=self.profile.batch_buckets[-1],
+            max_seq_len=self.profile.max_seq_len,
+            batch_buckets=tuple(self.profile.batch_buckets),
+            block_size=self.block_size)
+        kw.update(overrides)
+        return EngineConfig(**kw)
+
+    def engine(self, params=None, rng=None, **overrides):
+        """Compile the winning flow and build an Engine pinned to it."""
+        from repro.serving.engine import Engine
+        cm = self.compile()
+        if params is None:
+            params = cm.init_params(rng if rng is not None
+                                    else jax.random.key(0))
+        return Engine(cm, params, self.engine_config(**overrides))
+
+    def describe(self) -> str:
+        lines = [f"serving-autotune[{self.cfg.name} x {self.profile.name}] "
+                 f"buckets={list(self.profile.batch_buckets)} "
+                 f"pin=b{self.best_bucket} block_size={self.block_size}"]
+        for b in self.profile.batch_buckets:
+            er = self.per_bucket[b]
+            t = self._measured_per_token(b)
+            meas = f" measured={t * b * 1e3:.3f}ms" \
+                   f" per_tok={t * 1e3:.3f}ms" if t is not None else ""
+            lines.append(f"  b{b}: [{er.best.knob_str()}]{meas}")
+        if self.block_times_us:
+            lines.append("  block_us: " + " ".join(
+                f"{k}:{v:.0f}" for k, v in sorted(self.block_times_us.items())))
+        return "\n".join(lines)
+
+
+def tune_block_size(cfg: ModelConfig, profile: ServingProfile, *,
+                    iters: int = 5, seed: int = 0
+                    ) -> Tuple[int, Dict[int, float]]:
+    """Microbenchmark the paged decode-attention lookup per candidate block
+    size at the profile's largest bucket and pick the fastest (ties -> the
+    larger block: fewer table entries).  Uses the registry-resolved backend
+    (Pallas gather on TPU, ref fallback elsewhere)."""
+    from repro.kernels.registry import REGISTRY
+    att = cfg.attention
+    if att is None:
+        raise ValueError(f"{cfg.name} has no attention; nothing to tune")
+    B = profile.batch_buckets[-1]
+    H, KV, D = att.n_heads, att.n_kv_heads, att.head_dim
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(B, 1, H, D), jnp.float32)
+    times: Dict[int, float] = {}
+    from repro.serving.kvcache import blocks_for_tokens
+    use_pallas = REGISTRY.resolve("paged_decode_attention") == "pallas"
+    for bs in profile.block_sizes:
+        nblk = blocks_for_tokens(profile.max_seq_len, bs)
+        NB = 1 + B * nblk
+        kp = jnp.asarray(rng.randn(NB, bs, KV, D), jnp.float32)
+        vp = jnp.asarray(rng.randn(NB, bs, KV, D), jnp.float32)
+        bt = jnp.asarray(
+            1 + (np.arange(B * nblk) % (NB - 1)).reshape(B, nblk), jnp.int32)
+        lens = jnp.full((B,), profile.max_seq_len - 1, jnp.int32)
+        if use_pallas:
+            fn = REGISTRY.get("paged_decode_attention", "pallas").fn
+            run = jax.jit(lambda q, kp, vp, bt, ln: fn(q, kp, vp, bt, ln))
+        else:
+            ref = REGISTRY.get("paged_decode_attention", "ref").fn
+            run = jax.jit(lambda q, kp, vp, bt, ln:
+                          ref(q, kp, vp, bt, ln,
+                              compute_dtype=jnp.float32))
+        jax.block_until_ready(run(q, kp, vp, bt, lens))    # compile + warm
+        ts = []
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(q, kp, vp, bt, lens))
+            ts.append(time.perf_counter() - t0)
+        times[bs] = float(np.median(ts) * 1e6)
+    best = min(sorted(times, reverse=True), key=lambda b: times[b])
+    return best, times
+
+
+def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
+                    base_flow: Optional[FlowConfig] = None,
+                    mesh=None,
+                    validate: str = "measure",
+                    iters: int = 3,
+                    smoke: bool = False,
+                    tune_blocks: bool = True,
+                    use_cache: bool = True) -> DecodeAutotune:
+    """Search the flow design space for each decode cell of the serving
+    profile and return the pinnable result.
+
+    ``validate``: ``"measure"`` (default) AOT-compiles and wall-clocks each
+    top-k survivor, ranking by measured step time; ``"compile"`` ranks by
+    the deterministic estimator order and confirms footprints only (use for
+    reproducible tuning decisions in CI); ``"none"`` skips validation (the
+    estimator ranking alone — cheapest).  ``mesh`` makes the dp/tp/pp
+    factorization part of the search (or pins it, exactly as in
+    ``repro.flow.compile``)."""
+    from repro.flow import _resolve_cfg
+    if validate not in ("measure", "compile", "none"):
+        raise ValueError(f"unknown validate mode {validate!r}")
+    cfg = _resolve_cfg(arch_or_cfg, smoke)
+    profile = profile if profile is not None else ServingProfile()
+    flow0 = base_flow if base_flow is not None else FlowConfig(mode="folded")
+
+    mesh_obj = None
+    devices = 1
+    if mesh is not None:
+        from repro.distributed.meshspec import MeshSpec
+        spec = MeshSpec.of(mesh)
+        mesh_obj = mesh if hasattr(mesh, "devices") else spec.build()
+        devices = spec.size
+
+    per_bucket: Dict[int, Any] = {}
+    for bucket in profile.batch_buckets:
+        shape = profile.shape_for(bucket)
+        if validate == "measure":
+            validator = dse.measure_validator(cfg, shape, mesh=mesh_obj,
+                                              iters=iters)
+        elif validate == "compile":
+            validator = dse.compile_validator(cfg, shape)
+        else:
+            validator = None
+        per_bucket[bucket] = dse.explore(
+            cfg, shape, flow0, devices=devices, validator=validator,
+            rank_measured=validate == "measure", use_cache=use_cache)
+
+    if tune_blocks:
+        block_size, block_times = tune_block_size(cfg, profile, iters=iters)
+    else:
+        block_size, block_times = profile.block_sizes[0], {}
+    return DecodeAutotune(cfg=cfg, profile=profile, per_bucket=per_bucket,
+                          block_size=block_size, block_times_us=block_times,
+                          mesh=mesh_obj)

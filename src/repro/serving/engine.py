@@ -1,33 +1,144 @@
-"""Batched serving engine: prefill → decode with donated rolling caches.
+"""Serving engine: continuous batching over a paged KV-cache.
 
-The Engine is a thin consumer of :class:`repro.flow.CompiledModel` — the
-compiled model owns the jitted prefill/decode/generate stages (paper:
-autorun — no host control between tokens beyond the sampling loop);
-``generate_fori`` runs N decode steps inside a single on-device
-``fori_loop`` (fully host-free generation, the strongest autorun analogue).
-The Engine adds the serving-side policy: bound parameters and sampling
-configuration.
+The Engine is the serving-side consumer of :class:`repro.flow.CompiledModel`
+(the compiled model owns the jitted prefill/decode stages; the paper's
+autorun kernels are the reason the host does nothing between tokens beyond
+sampling).  On top of it the Engine adds the production loop:
+
+* ``run(requests)`` — continuous batching: a FIFO queue feeds ``max_batch``
+  slots; finished sequences are evicted and new prompts prefilled into the
+  freed slots between decode ticks (``serving/scheduler.py``), with KV state
+  held in a paged block pool (``serving/kvcache.py``) so memory scales with
+  live tokens;
+* shape bucketing — prompt lengths and batch sizes round up to a fixed
+  ladder, so every tick reuses a jitted program instead of retracing;
+* per-request latency / throughput metrics, surfaced in ``describe()``;
+* ``generate`` / ``generate_fori`` — the single-batch rolling-cache paths,
+  unchanged.
+
+Bucketed prefill left-pads prompts and threads explicit per-row positions
+through the model (``batch["positions"]``); padded rows carry negative
+positions, which the reference attention path masks out.  The TPU flash
+kernel's mask is iota-based, so exact bucketed prefill currently requires
+the reference attention path (decode, where serving spends its time, is
+position-driven on both paths).
 """
 from __future__ import annotations
 
+import math
+import time
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.plan import ExecutionPlan
 from repro.flow import CompiledModel
+from repro.serving.kvcache import (PagedKVCache, blocks_for_tokens,
+                                   merge_state, slice_state)
+from repro.serving.scheduler import (Request, RequestResult, Scheduler,
+                                     bucket_for)
+
+
+def _pow2_ladder(lo: int, hi: int) -> Tuple[int, ...]:
+    out = []
+    b = lo
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return tuple(out)
 
 
 @dataclass
 class EngineConfig:
+    """Serving-policy knobs: sampling, the slot/shape envelope, and the
+    paged KV-pool geometry.  Validated at construction; bucket ladders
+    default to powers of two capped by the envelope."""
     temperature: float = 0.0          # 0 = greedy
     seed: int = 0
+    # serving envelope
+    max_batch: int = 4                # decode slots (continuous batching)
+    max_seq_len: int = 128            # per-request prompt + generation cap
+    batch_buckets: Optional[Tuple[int, ...]] = None
+    prompt_buckets: Optional[Tuple[int, ...]] = None
+    # paged KV pool
+    block_size: int = 16
+    num_blocks: Optional[int] = None  # pool size; None = full provisioning
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >=1, got {self.max_batch}")
+        if self.max_seq_len < 1:
+            raise ValueError(
+                f"max_seq_len must be >=1, got {self.max_seq_len}")
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >=1, got {self.block_size}")
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if self.batch_buckets is None:
+            self.batch_buckets = _pow2_ladder(1, self.max_batch)
+        else:
+            self.batch_buckets = tuple(sorted(set(int(b)
+                                                  for b in self.batch_buckets)))
+            if any(b < 1 for b in self.batch_buckets):
+                raise ValueError("batch buckets must be positive")
+            if self.batch_buckets[-1] != self.max_batch:
+                raise ValueError(
+                    f"batch_buckets must end at max_batch={self.max_batch}, "
+                    f"got {self.batch_buckets}")
+        if self.prompt_buckets is None:
+            self.prompt_buckets = _pow2_ladder(
+                min(8, self.max_seq_len), self.max_seq_len)
+        else:
+            self.prompt_buckets = tuple(sorted(set(int(b)
+                                                   for b in self.prompt_buckets)))
+            if any(b < 1 for b in self.prompt_buckets):
+                raise ValueError("prompt buckets must be positive")
+            if self.prompt_buckets[-1] > self.max_seq_len:
+                raise ValueError(
+                    f"prompt buckets exceed max_seq_len={self.max_seq_len}")
+            if self.prompt_buckets[-1] < self.max_seq_len:
+                self.prompt_buckets += (self.max_seq_len,)
+
+    @property
+    def blocks_per_slot(self) -> int:
+        return blocks_for_tokens(self.max_seq_len, self.block_size)
+
+
+@dataclass
+class RunReport:
+    """Engine.run outcome: per-request results plus loop-level metrics."""
+    results: List[RequestResult]
+    metrics: Dict[str, Any]
+
+    @property
+    def by_id(self) -> Dict[Any, RequestResult]:
+        return {r.rid: r for r in self.results}
+
+    def describe(self) -> str:
+        m = self.metrics
+        return (
+            f"serving[{m['n_requests']} req] "
+            f"{m['generated_tokens']} tok in {m['wall_s']:.3f}s "
+            f"({m['tokens_per_s']:.1f} tok/s)\n"
+            f"  latency: p50={m['p50_latency_s'] * 1e3:.1f}ms "
+            f"p95={m['p95_latency_s'] * 1e3:.1f}ms "
+            f"ttft_p50={m['p50_ttft_s'] * 1e3:.1f}ms\n"
+            f"  loop: ticks={m['decode_ticks']} "
+            f"prefill_batches={m['prefill_batches']} "
+            f"admissions={m['admissions']} evictions={m['evictions']} "
+            f"refills={m['refills']}\n"
+            f"  kv-pool: {m['pool_blocks']} blocks x {m['block_size']} tok, "
+            f"peak_used={m['peak_used_blocks']} "
+            f"peak_live_tokens={m['peak_live_tokens']}")
 
 
 class Engine:
     def __init__(self, compiled: Union[CompiledModel, ExecutionPlan], params,
-                 ecfg: EngineConfig = None, mesh=None):
+                 ecfg: Optional[EngineConfig] = None, mesh=None):
         if isinstance(compiled, ExecutionPlan):   # legacy plan-based wiring
             compiled = CompiledModel.from_plan(compiled, mesh=mesh)
         elif mesh is not None and mesh is not compiled.mesh:
@@ -37,9 +148,11 @@ class Engine:
         self.compiled = compiled
         self.plan = compiled.plan
         self.params = params
-        self.ecfg = ecfg or EngineConfig()
+        self.ecfg = ecfg if ecfg is not None else EngineConfig()
         self.mesh = compiled.mesh
+        self.last_report: Optional[RunReport] = None
 
+    # -- single-batch generation (rolling cache) -----------------------------
     def generate(self, batch: Dict[str, Any], steps: int
                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
         """Prefill on the prompt batch, then decode ``steps`` tokens."""
@@ -50,3 +163,178 @@ class Engine:
     def generate_fori(self, batch: Dict[str, Any], steps: int) -> jnp.ndarray:
         """Fully on-device generation: the whole decode loop is one program."""
         return self.compiled.generate_fori(self.params, batch, steps)
+
+    # -- continuous-batching serving loop ------------------------------------
+    def _sample(self, logits, key, temperature: float):
+        # one sampling policy for every path: generate(), generate_fori()
+        # and the run() loop all go through CompiledModel._sample
+        return self.compiled._sample(logits, key, temperature)
+
+    def new_cache(self) -> PagedKVCache:
+        e = self.ecfg
+        return PagedKVCache(self.plan, e.max_batch, block_size=e.block_size,
+                            blocks_per_slot=e.blocks_per_slot,
+                            num_blocks=e.num_blocks)
+
+    def run(self, requests: Sequence[Request]) -> RunReport:
+        """Serve ``requests`` to completion with continuous batching over
+        the paged KV pool; returns per-request results + loop metrics
+        (also kept as ``self.last_report`` for ``describe()``)."""
+        e = self.ecfg
+        cache = self.new_cache()
+        sched = Scheduler(e.max_batch, e.block_size, cache.pool,
+                          max_seq_len=e.max_seq_len)
+        for r in requests:
+            sched.submit(r)
+        # Left-padded (bucketed) prefill is only exact when every
+        # cross-position op masks by the positions array: the Pallas flash
+        # kernel masks by iota instead, and recurrent/conv temporal-mixing
+        # ops never see positions at all — both would consume the pad tokens
+        # as real context.  Enforce exact prompt buckets there rather than
+        # silently corrupt.
+        has_recurrence = any(not e.paged and e.op.op != "attention"
+                             for e in cache._entries)
+        pad_unsafe = has_recurrence or self.plan.kernels.get("attention") in (
+            "pallas", "pallas_interpret")
+
+        rng = jax.random.key(e.seed)
+        t0 = time.perf_counter()
+        ticks = prefill_batches = 0
+        peak_used = peak_live = 0
+
+        def evict_finished():
+            for sidx in sched.finished():
+                cache.evict(sidx)
+                sched.evict(sidx)
+
+        while sched.has_work():
+            # 1. admit into freed slots: bucketed left-padded prefill
+            adm = sched.admissions()
+            if not adm and not sched.active_slots:
+                # nothing running and the queue head still can't be admitted:
+                # its block budget exceeds the whole pool — fail loudly
+                # instead of spinning
+                head = sched.queue[0][0]
+                raise RuntimeError(
+                    f"request {head.rid!r} needs "
+                    f"{head.total_budget} tokens of KV but the pool can "
+                    f"never free enough blocks "
+                    f"({cache.pool.num_blocks - 1} x {e.block_size} tokens)")
+            if adm:
+                Bp = bucket_for(len(adm), e.batch_buckets)
+                Sp = bucket_for(max(a.request.prompt_len for a in adm),
+                                e.prompt_buckets)
+                if Sp > self.plan.cache_len:
+                    raise ValueError(
+                        f"prompt bucket {Sp} exceeds the compiled cell's "
+                        f"cache length {self.plan.cache_len}; compile the "
+                        f"model with a decode shape covering max_seq_len")
+                tokens = np.zeros((Bp, Sp), np.int32)
+                positions = np.full((Bp, Sp), -1, np.int32)
+                for i, a in enumerate(adm):
+                    pad = Sp - a.request.prompt_len
+                    if pad and pad_unsafe:
+                        why = ("the model has recurrent temporal-mixing "
+                               "state that consumes pad tokens unmasked"
+                               if has_recurrence else
+                               "the compiled attention backend "
+                               f"({self.plan.kernels.get('attention')}) "
+                               "masks by position index and would attend "
+                               "the padding")
+                        raise ValueError(
+                            f"request {a.request.rid!r}: prompt length "
+                            f"{a.request.prompt_len} needs left-padding to "
+                            f"bucket {Sp}, but {why}; use exact "
+                            "prompt_buckets matching the prompt lengths"
+                            + ("" if has_recurrence else
+                               " or compile with backend='reference'"))
+                    tokens[i, pad:] = a.request.prompt
+                    positions[i] = np.arange(Sp, dtype=np.int32) - pad
+                logits, pstate, _ = self.compiled.prefill(
+                    self.params, {"tokens": jnp.asarray(tokens),
+                                  "positions": jnp.asarray(positions)})
+                rng, k = jax.random.split(rng)
+                toks = np.asarray(
+                    self._sample(logits[:, -1], k, e.temperature))
+                for i, a in enumerate(adm):
+                    cache.admit(a.slot, a.request.prompt_len,
+                                a.reserve_tokens, pstate, i,
+                                Sp - a.request.prompt_len)
+                    sched.record_token(a.slot, int(toks[i]), first=True)
+                prefill_batches += 1
+                peak_used = max(peak_used, cache.pool.used_blocks)
+                peak_live = max(peak_live, cache.live_tokens())
+                evict_finished()
+
+            # 2. one decode tick over the occupied slots (batch-bucketed)
+            active = sched.active_slots
+            if active:
+                B = bucket_for(sched.high_water, e.batch_buckets)
+                tokens = np.zeros((B, 1), np.int32)
+                positions = np.zeros((B, 1), np.int32)
+                for s in sched.slots[:B]:
+                    if not s.free:
+                        tokens[s.index, 0] = s.last_token
+                        positions[s.index, 0] = s.pos
+                part = slice_state(cache.state, cache.slot_axes, B)
+                logits, new_part, _ = self.compiled.decode(
+                    self.params, {"tokens": jnp.asarray(tokens),
+                                  "positions": jnp.asarray(positions)},
+                    part, jnp.int32(0))
+                cache.state = merge_state(cache.state, new_part,
+                                          cache.slot_axes, B)
+                cache.note_decode_tick(active)
+                rng, k = jax.random.split(rng)
+                toks = np.asarray(
+                    self._sample(logits[:, -1], k, e.temperature))
+                for sidx in active:
+                    sched.record_token(sidx, int(toks[sidx]))
+                ticks += 1
+                peak_used = max(peak_used, cache.pool.used_blocks)
+                peak_live = max(peak_live, cache.live_tokens())
+                evict_finished()
+
+        wall = time.perf_counter() - t0
+        results = sched.results
+        lats = sorted(r.latency_s for r in results) or [0.0]
+        ttfts = sorted(r.ttft_s for r in results) or [0.0]
+
+        def pct(xs, p):
+            return xs[min(len(xs) - 1, int(math.ceil(p * len(xs))) - 1)]
+
+        gen = sum(r.n_generated for r in results)
+        report = RunReport(results=results, metrics={
+            "n_requests": len(results),
+            "generated_tokens": gen,
+            "wall_s": wall,
+            "tokens_per_s": gen / wall if wall > 0 else float("inf"),
+            "p50_latency_s": pct(lats, 0.50),
+            "p95_latency_s": pct(lats, 0.95),
+            "p50_ttft_s": pct(ttfts, 0.50),
+            "decode_ticks": ticks,
+            "prefill_batches": prefill_batches,
+            "admissions": sched.n_admitted,
+            "evictions": sched.n_evicted,
+            "refills": sched.n_refills,
+            "pool_blocks": cache.num_blocks,
+            "block_size": e.block_size,
+            "peak_used_blocks": peak_used,
+            "peak_live_tokens": peak_live,
+            "pool_bytes": cache.pool_bytes(),
+        })
+        self.last_report = report
+        return report
+
+    # -- reporting -----------------------------------------------------------
+    def describe(self, stats: bool = False) -> str:
+        """Flow report + serving envelope + the last run's metrics."""
+        e = self.ecfg
+        lines = [self.compiled.describe(stats=stats),
+                 f"  serving: slots={e.max_batch} max_seq_len={e.max_seq_len} "
+                 f"block={e.block_size} "
+                 f"batch_buckets={list(e.batch_buckets)} "
+                 f"prompt_buckets={list(e.prompt_buckets)}"]
+        if self.last_report is not None:
+            lines.append("  " +
+                         self.last_report.describe().replace("\n", "\n  "))
+        return "\n".join(lines)

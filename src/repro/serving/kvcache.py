@@ -1,0 +1,368 @@
+"""Paged KV-cache manager: fixed-size blocks from a device-resident pool.
+
+The rolling per-request cache reserves ``max_seq_len x n_slots`` tokens of
+K/V for every layer whether the slots are live or not.  The paged manager
+replaces it for serving: K/V live in a per-layer *pool* of fixed-size blocks,
+each slot owns a chain of blocks recorded in a block table, and the decode
+lookup path (``kernels/decode_attention.paged_decode_attention`` on TPU, the
+registered ref fallback elsewhere) gathers through the table — device memory
+scales with *live tokens*, not ``max_seq_len x batch``.
+
+Layout notes:
+
+* block 0 of every pool is the reserved **trash block**: freed slots park
+  their block tables on it, so the decode tick's unconditional append for
+  inactive slots lands in memory no live request owns;
+* attention state per key becomes ``{"kp", "vp", "bt", "len"}`` — pools
+  (blocks, block_size, KV, Dh), per-slot block table (slots, nblk) and
+  per-slot decode position (slots,).  ``repro.core.ops_impl.op_attention``
+  recognizes this layout at trace time;
+* every *other* stateful op (conv/LRU/RWKV recurrences, cross-attention
+  K/V) keeps its dense layout with the slot dimension where the batch was;
+* folded units carry the usual leading ``reps`` (layers) dimension on every
+  leaf; block tables are replicated per layer (ints, negligible).
+
+The manager is the host side: a free-list allocator plus the device-side
+packing of prefill caches into pool blocks (`admit`) and slot recycling
+(`evict`).  The scheduler decides *when* to admit/evict; the engine wires
+both to the compiled model.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+import functools
+
+from repro.core.lowering import _op_state_shapes, _mk_state, unit_key
+from repro.core.plan import ExecutionPlan
+
+TRASH_BLOCK = 0
+
+
+# Donated scatter of prompt blocks into a pool: under jit the pool buffer is
+# reused in place (on backends that support donation) instead of a whole-pool
+# copy per admitted request.  Retraces are bounded: one per (nlead,
+# nblk_used) pair, and nblk_used <= blocks_per_slot.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_blocks(pool, bidx, seg):
+    return pool.at[bidx].set(seg)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_blocks_folded(pool, bidx, seg):
+    return pool.at[:, bidx].set(seg)
+
+
+# ---------------------------------------------------------------------------
+# host-side block allocator
+# ---------------------------------------------------------------------------
+
+class BlockPool:
+    """Free-list allocator over pool block ids.  Block 0 is the trash block
+    and is never handed out."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (one is the trash block)")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._free_set = set(self._free)    # O(1) double-free detection
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def allocate(self, n: int) -> List[int]:
+        if not self.can_allocate(n):
+            raise RuntimeError(
+                f"KV pool exhausted: want {n} blocks, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
+        return out
+
+    def release(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b == TRASH_BLOCK:
+                raise ValueError("trash block cannot be released")
+            if b in self._free_set:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)
+            self._free_set.add(b)
+
+
+# ---------------------------------------------------------------------------
+# paged serving state
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class _Entry:
+    """One stateful op's place in the serving-state tree."""
+    ukey: str
+    skey: str
+    op: Any                  # MicroOp
+    paged: bool              # attention (non-cross) -> paged pool layout
+    nlead: int               # 0, or 1 for folded units (leading reps dim)
+    reps: int
+
+
+def _state_entries(plan: ExecutionPlan) -> List[_Entry]:
+    graph = plan.graph
+    out: List[_Entry] = []
+    for unit in plan.units:
+        ukey = unit_key(graph, unit)
+        if unit.folded:
+            protos = [graph.blocks[unit.indices[j]] for j in range(unit.period)]
+            nlead, reps = 1, unit.reps
+        else:
+            protos = [graph.blocks[unit.indices[0]]]
+            nlead, reps = 0, 1
+        for blk in protos:
+            for op in blk.stateful_ops():
+                paged = op.op == "attention" and not op.attrs.get("cross")
+                out.append(_Entry(ukey, op.attrs["state_key"], op, paged,
+                                  nlead, reps))
+    return out
+
+
+def blocks_for_tokens(tokens: int, block_size: int) -> int:
+    return max(1, math.ceil(tokens / block_size))
+
+
+class PagedKVCache:
+    """Device state + host allocator for one compiled plan's decode cell.
+
+    ``state`` is the pytree handed to the jitted decode stage in place of the
+    rolling cache; ``slot_axes`` mirrors it with the index of each leaf's
+    slot dimension (-1 for pool leaves, which are slot-agnostic) so the
+    engine can slice the tree down to a batch bucket and merge the result
+    back (:func:`slice_state` / :func:`merge_state`).
+    """
+
+    def __init__(self, plan: ExecutionPlan, n_slots: int, *,
+                 block_size: int, blocks_per_slot: int,
+                 num_blocks: Optional[int] = None):
+        if block_size < 1 or blocks_per_slot < 1 or n_slots < 1:
+            raise ValueError("block_size, blocks_per_slot, n_slots must be >=1")
+        self.plan = plan
+        self.cfg = plan.cfg
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.blocks_per_slot = blocks_per_slot    # block-table width
+        # default: full provisioning (every slot can hold its whole chain)
+        # plus the trash block; tighter pools exercise admission control
+        self.num_blocks = num_blocks if num_blocks is not None \
+            else 1 + n_slots * blocks_per_slot
+        self.pool = BlockPool(self.num_blocks)
+        self.slot_blocks: List[List[int]] = [[] for _ in range(n_slots)]
+        self._slot_len: List[int] = [0] * n_slots
+        self._entries = _state_entries(plan)
+        if not any(e.paged for e in self._entries):
+            raise ValueError(
+                f"{plan.cfg.name} has no self-attention KV state; the paged "
+                "cache applies to attention decoder models")
+        self.state, self.slot_axes = self._build()
+
+    # -- construction --------------------------------------------------------
+    @property
+    def capacity_tokens(self) -> int:
+        """Per-slot token capacity (block-table width x block size)."""
+        return self.blocks_per_slot * self.block_size
+
+    def _build(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        plan, cfg = self.plan, self.cfg
+        dt = plan.prec.compute_dtype
+        NB, bs, nblk = self.num_blocks, self.block_size, self.blocks_per_slot
+        state: Dict[str, Any] = {}
+        axes: Dict[str, Any] = {}
+        for e in self._entries:
+            lead = (e.reps,) if e.nlead else ()
+            ust = state.setdefault(e.ukey, {})
+            uax = axes.setdefault(e.ukey, {})
+            if e.paged:
+                att = cfg.attention
+                KV, Dh = att.n_kv_heads, att.head_dim
+                ust[e.skey] = {
+                    "kp": jnp.zeros(lead + (NB, bs, KV, Dh), dt),
+                    "vp": jnp.zeros(lead + (NB, bs, KV, Dh), dt),
+                    "bt": jnp.zeros(lead + (self.n_slots, nblk), jnp.int32),
+                    "len": jnp.zeros(lead + (self.n_slots,), jnp.int32),
+                }
+                uax[e.skey] = {"kp": -1, "vp": -1,
+                               "bt": e.nlead, "len": e.nlead}
+            else:
+                shapes = _op_state_shapes(e.op, cfg, self.n_slots,
+                                          plan.cache_len, dt)
+                made = _mk_state(shapes, lead)
+                if e.op.op == "attention":       # cross-attn nested dict
+                    ust[e.skey] = made
+                    uax[e.skey] = {suf: e.nlead for suf in made}
+                else:
+                    for suf, v in made.items():
+                        ust[e.skey + suf] = v
+                        uax[e.skey + suf] = e.nlead
+        return state, axes
+
+    # -- accounting ----------------------------------------------------------
+    def live_tokens(self) -> int:
+        """Tokens currently resident across live slots (host view)."""
+        return int(sum(self._slot_len))
+
+    def pool_bytes(self) -> int:
+        """Device bytes held by the K/V pools (all layers)."""
+        total = 0
+        for e in self._entries:
+            if not e.paged:
+                continue
+            st = self.state[e.ukey][e.skey]
+            total += st["kp"].size * st["kp"].dtype.itemsize
+            total += st["vp"].size * st["vp"].dtype.itemsize
+        return total
+
+    # -- admit / evict -------------------------------------------------------
+    def admit(self, slot: int, prompt_len: int, reserve_tokens: int,
+              prefill_state: Dict[str, Any], row: int, pad: int) -> List[int]:
+        """Move request ``row`` of a (rolling-layout) prefill state into
+        ``slot``: allocate its block chain, copy the prompt K/V into pool
+        blocks, point the slot's block-table row at the chain, set its
+        decode position, and copy the non-attention recurrent state into the
+        slot row.  ``pad`` is the request's left-padding inside the bucketed
+        prefill batch; ``reserve_tokens`` (>= prompt_len) is the chain
+        capacity to allocate up front (prompt + generation budget), the
+        admission-control quantity.
+        """
+        if self.slot_blocks[slot]:
+            raise RuntimeError(f"slot {slot} is occupied")
+        if reserve_tokens < prompt_len:
+            raise ValueError("reserve_tokens must cover the prompt")
+        if reserve_tokens > self.capacity_tokens:
+            raise ValueError(
+                f"request needs {reserve_tokens} tokens; slot capacity is "
+                f"{self.capacity_tokens} (blocks_per_slot x block_size)")
+        bs = self.block_size
+        nblk_used = blocks_for_tokens(prompt_len, bs)
+        n_alloc = blocks_for_tokens(reserve_tokens, bs)
+        blocks = self.pool.allocate(n_alloc)
+        self.slot_blocks[slot] = blocks
+        self._slot_len[slot] = prompt_len
+
+        table_row = np.zeros(self.blocks_per_slot, np.int32)
+        table_row[:n_alloc] = blocks
+        table_row = jnp.asarray(table_row)
+        bidx = jnp.asarray(blocks[:nblk_used], jnp.int32)
+        Lb = nblk_used * bs
+
+        for e in self._entries:
+            ust = self.state[e.ukey]
+            if e.paged:
+                pst = prefill_state[e.ukey][e.skey]
+                st = ust[e.skey]
+                new = dict(st)
+                for pool_key, cache_key in (("kp", "k"), ("vp", "v")):
+                    src = pst[cache_key]               # lead+(Bp, C, KV, Dh)
+                    rowv = src[:, row] if e.nlead else src[row]
+                    ax = e.nlead                       # cache-length axis
+                    pw = [(0, 0)] * rowv.ndim
+                    pw[ax] = (0, bs)                   # room for the tail block
+                    rowv = jnp.pad(rowv, pw)
+                    seg = lax.slice_in_dim(rowv, pad, pad + Lb, axis=ax)
+                    seg = seg.reshape(seg.shape[:ax] + (nblk_used, bs)
+                                      + seg.shape[ax + 1:])
+                    scatter = _scatter_blocks_folded if e.nlead \
+                        else _scatter_blocks
+                    new[pool_key] = scatter(st[pool_key], bidx, seg)
+                new["bt"] = (st["bt"].at[:, slot].set(table_row) if e.nlead
+                             else st["bt"].at[slot].set(table_row))
+                new["len"] = (st["len"].at[:, slot].set(prompt_len)
+                              if e.nlead
+                              else st["len"].at[slot].set(prompt_len))
+                ust[e.skey] = new
+            elif e.op.op == "attention":               # cross-attn {k, v}
+                pst = prefill_state[e.ukey][e.skey]
+                st = dict(ust[e.skey])
+                for suf, leaf in st.items():
+                    src = pst[suf]
+                    rowv = src[:, row] if e.nlead else src[row]
+                    st[suf] = (leaf.at[:, slot].set(rowv) if e.nlead
+                               else leaf.at[slot].set(rowv))
+                ust[e.skey] = st
+            else:
+                made = _op_state_shapes(e.op, self.cfg, 1, 1, None)
+                for suf in made:
+                    key = e.skey + suf
+                    src = prefill_state[e.ukey][key]
+                    rowv = src[:, row] if e.nlead else src[row]
+                    leaf = ust[key]
+                    ust[key] = (leaf.at[:, slot].set(rowv) if e.nlead
+                                else leaf.at[slot].set(rowv))
+        return blocks
+
+    def note_decode_tick(self, active_slots) -> None:
+        """Mirror the device-side ``len`` increment for live slots (the
+        device increments every row; only live slots count as live tokens)."""
+        for s in active_slots:
+            self._slot_len[s] += 1
+
+    def evict(self, slot: int) -> int:
+        """Free ``slot``'s block chain and park it on the trash block.
+        Returns the number of blocks released."""
+        blocks = self.slot_blocks[slot]
+        if not blocks:
+            return 0
+        self.pool.release(blocks)
+        self.slot_blocks[slot] = []
+        self._slot_len[slot] = 0
+        for e in self._entries:
+            if not e.paged:
+                continue
+            st = self.state[e.ukey][e.skey]
+            zrow = jnp.zeros((self.blocks_per_slot,), jnp.int32)
+            new = dict(st)
+            new["bt"] = (st["bt"].at[:, slot].set(zrow) if e.nlead
+                         else st["bt"].at[slot].set(zrow))
+            new["len"] = (st["len"].at[:, slot].set(0) if e.nlead
+                          else st["len"].at[slot].set(0))
+            self.state[e.ukey][e.skey] = new
+        return len(blocks)
+
+
+# ---------------------------------------------------------------------------
+# batch-bucket slicing (shape-bucketed decode ticks)
+# ---------------------------------------------------------------------------
+
+def slice_state(state: Dict[str, Any], slot_axes: Dict[str, Any],
+                n: int) -> Dict[str, Any]:
+    """First ``n`` slot rows of every slot-indexed leaf (pool leaves pass
+    through whole) — the decode tick's batch bucket."""
+    def f(x, ax):
+        if ax < 0 or x.shape[ax] == n:
+            return x
+        return lax.slice_in_dim(x, 0, n, axis=ax)
+    return jax.tree.map(f, state, slot_axes)
+
+
+def merge_state(full: Dict[str, Any], part: Dict[str, Any],
+                slot_axes: Dict[str, Any], n: int) -> Dict[str, Any]:
+    """Merge a bucketed decode tick's updated state back over the full slot
+    range.  Pool leaves (slot-agnostic) are taken from ``part`` wholesale —
+    they were donated into the tick; slot-indexed leaves splice the updated
+    rows over the untouched tail."""
+    def f(xf, xp, ax):
+        if ax < 0 or xf.shape[ax] == n:
+            return xp
+        rest = lax.slice_in_dim(xf, n, xf.shape[ax], axis=ax)
+        return jnp.concatenate([xp, rest], axis=ax)
+    return jax.tree.map(f, full, part, slot_axes)

@@ -101,6 +101,27 @@ def test_decode_attention_rolling(spec):
     assert relerr(y, r) < 1e-5
 
 
+@pytest.mark.parametrize("spec", [(2, 4, 2, 32, 4, 5, None),
+                                  (3, 8, 4, 16, 8, 3, 12),
+                                  (1, 4, 1, 64, 16, 2, None)])
+def test_paged_decode_attention(spec):
+    """The serving subsystem's block-table gather kernel (scalar-prefetch
+    index_map) vs the registered ref fallback, heterogeneous row lengths."""
+    B, H, KV, D, bs, nblk, win = spec
+    NB = 1 + B * nblk
+    q = jnp.asarray(R.randn(B, 1, H, D), jnp.float32)
+    kp = jnp.asarray(R.randn(NB, bs, KV, D), jnp.float32)
+    vp = jnp.asarray(R.randn(NB, bs, KV, D), jnp.float32)
+    bt = jnp.asarray(1 + R.permutation(B * nblk).reshape(B, nblk), jnp.int32)
+    lens = jnp.asarray([(7 * (b + 1)) % (nblk * bs) for b in range(B)],
+                       jnp.int32)
+    y = ops.paged_decode_attention(q, kp, vp, bt, lens, window=win,
+                                   interpret=True)
+    r = ref.paged_decode_attention_ref(q, kp, vp, bt, lens, window=win,
+                                       compute_dtype=jnp.float32)
+    assert relerr(y, r) < 1e-5
+
+
 @pytest.mark.parametrize("spec", [(2, 16, 64), (1, 33, 130), (3, 8, 256)])
 def test_lru_scan(spec):
     from repro.kernels.lru_scan import lru_scan, lru_scan_ref

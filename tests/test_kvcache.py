@@ -1,0 +1,166 @@
+"""Serving bookkeeping invariants: block pool, scheduler, engine config.
+
+These run without a model — the scheduler and allocator are pure host-side
+policy, which is exactly why they get their own exhaustive checks."""
+import numpy as np
+import pytest
+
+from repro.serving.engine import EngineConfig
+from repro.serving.kvcache import (BlockPool, TRASH_BLOCK, blocks_for_tokens)
+from repro.serving.scheduler import (Request, Scheduler, bucket_for,
+                                     synthetic_requests)
+
+
+# ---------------------------------------------------------------------------
+# block pool
+# ---------------------------------------------------------------------------
+
+def test_pool_never_hands_out_trash_block():
+    pool = BlockPool(8)
+    got = pool.allocate(7)
+    assert TRASH_BLOCK not in got
+    assert sorted(got) == list(range(1, 8))
+
+
+def test_pool_exhaustion_and_release():
+    pool = BlockPool(5)
+    a = pool.allocate(2)
+    b = pool.allocate(2)
+    assert not pool.can_allocate(1)
+    with pytest.raises(RuntimeError):
+        pool.allocate(1)
+    pool.release(a)
+    assert pool.can_allocate(2)
+    c = pool.allocate(2)
+    assert set(c) == set(a)                 # freed blocks are reused
+    assert pool.used_blocks == 4 and pool.free_blocks == 0
+    pool.release(b)
+    pool.release(c)
+    assert pool.used_blocks == 0
+
+
+def test_pool_double_free_rejected():
+    pool = BlockPool(4)
+    a = pool.allocate(1)
+    pool.release(a)
+    with pytest.raises(ValueError):
+        pool.release(a)
+    with pytest.raises(ValueError):
+        pool.release([TRASH_BLOCK])
+
+
+def test_blocks_for_tokens():
+    assert blocks_for_tokens(1, 8) == 1
+    assert blocks_for_tokens(8, 8) == 1
+    assert blocks_for_tokens(9, 8) == 2
+    assert blocks_for_tokens(0, 8) == 1     # empty chains still own a block
+
+
+def test_bucket_for():
+    assert bucket_for(1, (2, 4, 8)) == 2
+    assert bucket_for(3, (2, 4, 8)) == 4
+    assert bucket_for(8, (2, 4, 8)) == 8
+    with pytest.raises(ValueError):
+        bucket_for(9, (2, 4, 8))
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def _sched(n_slots=2, blocks=9, bs=4, max_seq=16):
+    return Scheduler(n_slots, bs, BlockPool(blocks), max_seq_len=max_seq)
+
+
+def test_admission_is_fifo_and_slot_bound():
+    s = _sched(n_slots=2)
+    for i in range(4):
+        s.submit(Request(i, np.arange(1, 5), max_new_tokens=2))
+    adm = s.admissions()
+    assert [a.request.rid for a in adm] == [0, 1]      # FIFO, 2 slots
+    assert s.admissions() == []                        # slots full
+    assert s.high_water == 2
+    assert len(s.queue) == 2
+
+
+def test_admission_control_blocks_on_pool_budget():
+    # 9-block pool => 8 allocatable; each request needs 2 (prompt 4 + new 2,
+    # block 4) => only 4 fit even though slots are plentiful
+    s = _sched(n_slots=8, blocks=9)
+    for i in range(6):
+        s.submit(Request(i, np.arange(1, 5), max_new_tokens=2))
+    adm = s.admissions()
+    assert len(adm) == 4
+    assert s.pool.free_blocks == 8                     # reserved, not allocated
+
+
+def test_eviction_frees_slot_and_counts_refills():
+    s = _sched(n_slots=1)
+    s.submit(Request("a", np.arange(1, 4), max_new_tokens=2))
+    s.submit(Request("b", np.arange(1, 4), max_new_tokens=1))
+    (adm,) = s.admissions()
+    assert adm.request.rid == "a" and s.n_refills == 0
+    s.record_token(adm.slot, 7, first=True)
+    s.record_token(adm.slot, 8)
+    assert s.finished() == [adm.slot]
+    res = s.evict(adm.slot)
+    assert res.rid == "a" and res.tokens == [7, 8]
+    assert res.finish_reason == "length"
+    (adm2,) = s.admissions()                           # refill the freed slot
+    assert adm2.request.rid == "b" and s.n_refills == 1
+    s.record_token(adm2.slot, 9, first=True)
+    assert s.finished() == [adm2.slot]
+    s.evict(adm2.slot)
+    assert not s.has_work()
+    assert s.n_admitted == 2 and s.n_evicted == 2
+
+
+def test_stop_token_finishes_early():
+    s = _sched()
+    s.submit(Request("a", np.arange(1, 4), max_new_tokens=8, stop_token=42))
+    (adm,) = s.admissions()
+    s.record_token(adm.slot, 5, first=True)
+    assert s.finished() == []
+    s.record_token(adm.slot, 42)
+    assert s.finished() == [adm.slot]
+    assert s.evict(adm.slot).finish_reason == "stop"
+
+
+def test_oversized_request_rejected_at_submit():
+    s = _sched(max_seq=16)
+    with pytest.raises(ValueError):
+        s.submit(Request("big", np.arange(1, 14), max_new_tokens=8))
+
+
+def test_synthetic_requests_deterministic():
+    a = synthetic_requests(4, 99, prompt_len=8, seed=3)
+    b = synthetic_requests(4, 99, prompt_len=8, seed=3)
+    assert [r.prompt.tolist() for r in a] == [r.prompt.tolist() for r in b]
+    assert all(r.prompt_len <= 8 for r in a)
+
+
+# ---------------------------------------------------------------------------
+# engine config validation
+# ---------------------------------------------------------------------------
+
+def test_engine_config_defaults_ladders():
+    e = EngineConfig(max_batch=8, max_seq_len=48)
+    assert e.batch_buckets == (1, 2, 4, 8)
+    assert e.prompt_buckets[-1] == 48
+    assert e.blocks_per_slot * e.block_size >= 48
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError):
+        EngineConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        EngineConfig(block_size=0)
+    with pytest.raises(ValueError):
+        EngineConfig(max_batch=4, batch_buckets=(1, 2))   # must end at max
+    with pytest.raises(ValueError):
+        EngineConfig(max_seq_len=32, prompt_buckets=(16, 64))  # overflows
+    with pytest.raises(ValueError):
+        EngineConfig(temperature=-1.0)
+    # a partial prompt ladder is padded up to the envelope
+    e = EngineConfig(max_seq_len=64, prompt_buckets=(16,))
+    assert e.prompt_buckets == (16, 64)

@@ -1,13 +1,17 @@
-"""Serving-engine integration: batched generation, host-free decode loop.
+"""Serving-engine integration: batched generation, host-free decode loop,
+continuous batching over the paged KV cache, engine-level autotune.
 The engine consumes a repro.flow.CompiledModel (the public API)."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import flow as rflow
-from repro.configs.base import FlowConfig
+from repro.configs.base import FlowConfig, ShapeConfig
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import Request, synthetic_requests
 
 from conftest import SMOKE_SHAPE, smoke_batch
 
@@ -18,6 +22,19 @@ def _engine(arch="llama3.2-1b"):
                        smoke=True)
     params = cm.init_params(jax.random.key(0))
     return cm.cfg, cm, Engine(cm, params, EngineConfig(temperature=0.0))
+
+
+SERVE_SHAPE = ShapeConfig("serve", "decode", 64, 4)
+
+
+@functools.lru_cache(maxsize=1)
+def _serve_cm():
+    """One compiled decode cell shared by the serving-loop tests."""
+    cm = rflow.compile("llama3.2-1b", SERVE_SHAPE,
+                       FlowConfig(mode="folded", precision="fp32"),
+                       smoke=True)
+    params = cm.init_params(jax.random.key(0))
+    return cm, params
 
 
 def test_generate_shapes_and_determinism():
@@ -68,3 +85,245 @@ def test_temperature_sampling_runs():
     batch = smoke_batch(cfg, B=2, S=8, with_labels=False)
     toks, _ = eng.generate(batch, steps=4)
     assert toks.shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching over the paged KV cache
+# ---------------------------------------------------------------------------
+
+def test_run_continuous_batching_16_requests():
+    """The acceptance loop: 16 concurrent requests through 4 slots finish
+    with multiple eviction/refill cycles and coherent metrics."""
+    cm, params = _serve_cm()
+    eng = Engine(cm, params, EngineConfig(max_batch=4, max_seq_len=64,
+                                          block_size=8))
+    reqs = synthetic_requests(16, cm.cfg.vocab_size, prompt_len=8,
+                              max_new_tokens=4, seed=1)
+    report = eng.run(reqs)
+    assert len(report.results) == 16
+    assert all(r.n_generated == 4 for r in report.results)
+    assert all(r.finish_reason == "length" for r in report.results)
+    m = report.metrics
+    assert m["evictions"] == 16 and m["admissions"] == 16
+    assert m["refills"] >= 2                 # >= 2 eviction/refill cycles
+    assert m["generated_tokens"] == 64
+    assert m["tokens_per_s"] > 0
+    assert m["p95_latency_s"] >= m["p50_latency_s"] > 0
+    assert m["peak_used_blocks"] <= eng.new_cache().num_blocks - 1
+    # metrics surface through describe()
+    d = eng.describe()
+    assert "serving[16 req]" in d and "refills=" in d and "kv-pool" in d
+
+
+def test_run_is_deterministic():
+    cm, params = _serve_cm()
+    reqs = synthetic_requests(6, cm.cfg.vocab_size, prompt_len=6,
+                              max_new_tokens=3, seed=2)
+    ecfg = EngineConfig(max_batch=2, max_seq_len=64, block_size=8)
+    r1 = Engine(cm, params, ecfg).run(reqs)
+    r2 = Engine(cm, params, ecfg).run(reqs)
+    assert [r.tokens for r in r1.results] == [r.tokens for r in r2.results]
+
+
+def test_paged_decode_matches_rolling_tokens():
+    """Continuous-batching generation over the paged pool reproduces the
+    rolling-cache generate() token-for-token (same seeds, greedy)."""
+    cm, params = _serve_cm()
+    rng = np.random.RandomState(5)
+    prompts = rng.randint(0, cm.cfg.vocab_size, (2, 8)).astype(np.int32)
+    toks_roll, _ = cm.generate(params, {"tokens": jnp.asarray(prompts)},
+                               steps=6)
+    eng = Engine(cm, params,
+                 EngineConfig(max_batch=2, max_seq_len=64, block_size=8,
+                              prompt_buckets=(8, 64)))
+    rep = eng.run([Request("a", prompts[0], max_new_tokens=6),
+                   Request("b", prompts[1], max_new_tokens=6)])
+    paged = np.stack([rep.by_id["a"].tokens, rep.by_id["b"].tokens])
+    np.testing.assert_array_equal(np.asarray(toks_roll), paged)
+
+
+def test_paged_decode_logits_byte_identical_to_rolling():
+    """One decode tick, same cache contents: the paged lookup path (gather
+    through block tables) must produce *byte-identical* logits to the
+    rolling cache — the ref fallback mirrors _sdpa operation-for-operation
+    and the pool capacity is sized so the gathered length matches."""
+    from repro.serving.kvcache import PagedKVCache
+    cm, params = _serve_cm()
+    B, S = 2, 8
+    rng = np.random.RandomState(7)
+    toks = rng.randint(0, cm.cfg.vocab_size, (B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks)}
+    # rolling: prefill then one decode step at position S
+    logits_p, rstate, _ = cm.prefill(params, batch)
+    nxt = jnp.argmax(logits_p[:, -1], -1).astype(jnp.int32)[:, None]
+    lg_roll, _, _ = cm.decode(params, {"tokens": nxt}, rstate, jnp.int32(S))
+    # paged: pack the same prefill into a pool whose per-slot capacity
+    # equals the rolling cache length (64 = 8 blocks x 8), decode same token
+    _, pstate, _ = cm.prefill(params, batch)
+    cache = PagedKVCache(cm.plan, B, block_size=8, blocks_per_slot=8)
+    for i in range(B):
+        cache.admit(i, S, S + 8, pstate, i, 0)
+    lg_paged, _, _ = cm.decode(
+        params, {"tokens": nxt,
+                 "positions": jnp.full((B, 1), S, jnp.int32)},
+        cache.state, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(lg_roll), np.asarray(lg_paged))
+
+
+def test_paged_decode_matches_rolling_with_bucketed_prompts():
+    """Left-padded bucketed prefill: requests of different lengths batched
+    into one prompt bucket still reproduce their individual rolling-path
+    generations exactly."""
+    cm, params = _serve_cm()
+    rng = np.random.RandomState(11)
+    p_long = rng.randint(0, cm.cfg.vocab_size, 8).astype(np.int32)
+    p_short = rng.randint(0, cm.cfg.vocab_size, 5).astype(np.int32)
+    want_long, _ = cm.generate(params, {"tokens": jnp.asarray(p_long[None])},
+                               steps=5)
+    want_short, _ = cm.generate(params,
+                                {"tokens": jnp.asarray(p_short[None])},
+                                steps=5)
+    eng = Engine(cm, params,
+                 EngineConfig(max_batch=2, max_seq_len=64, block_size=8))
+    rep = eng.run([Request("long", p_long, max_new_tokens=5),
+                   Request("short", p_short, max_new_tokens=5)])
+    np.testing.assert_array_equal(np.asarray(want_long)[0],
+                                  rep.by_id["long"].tokens)
+    np.testing.assert_array_equal(np.asarray(want_short)[0],
+                                  rep.by_id["short"].tokens)
+
+
+def test_paged_pool_memory_scales_with_live_tokens():
+    """The point of paging: pool bytes are set by the block budget, not by
+    max_seq_len x slots.  A pool provisioned for half the envelope is ~half
+    the rolling cache's footprint and still serves (admission control queues
+    the rest)."""
+    cm, params = _serve_cm()
+    full = EngineConfig(max_batch=4, max_seq_len=64, block_size=8)
+    half_blocks = 1 + (full.blocks_per_slot * 4) // 2
+    half = EngineConfig(max_batch=4, max_seq_len=64, block_size=8,
+                        num_blocks=half_blocks)
+    eng_full = Engine(cm, params, full)
+    eng_half = Engine(cm, params, half)
+    bytes_full = eng_full.new_cache().pool_bytes()
+    bytes_half = eng_half.new_cache().pool_bytes()
+    assert bytes_half < 0.6 * bytes_full
+    reqs = synthetic_requests(6, cm.cfg.vocab_size, prompt_len=8,
+                              max_new_tokens=3, seed=4)
+    rep = eng_half.run(reqs)
+    assert len(rep.results) == 6
+    assert rep.metrics["peak_used_blocks"] < half_blocks
+
+
+def test_slice_merge_roundtrip():
+    from repro.serving.kvcache import merge_state, slice_state
+    cm, params = _serve_cm()
+    eng = Engine(cm, params, EngineConfig(max_batch=4, max_seq_len=64,
+                                          block_size=8))
+    cache = eng.new_cache()
+    part = slice_state(cache.state, cache.slot_axes, 2)
+    back = merge_state(cache.state, part, cache.slot_axes, 2)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), cache.state, back)
+
+
+def test_run_raises_on_unservable_request():
+    """A request whose block budget exceeds the whole pool fails loudly
+    instead of spinning in the admission loop."""
+    cm, params = _serve_cm()
+    eng = Engine(cm, params, EngineConfig(max_batch=2, max_seq_len=64,
+                                          block_size=8, num_blocks=3))
+    with pytest.raises(RuntimeError, match="never free enough blocks"):
+        eng.run([Request("x", np.arange(1, 30, dtype=np.int32),
+                         max_new_tokens=8)])
+
+
+def test_run_rejects_padded_prompts_for_recurrent_models():
+    """Hybrid models (recurrences mix across positions without reading the
+    positions array) must refuse left-padded bucketed prefill instead of
+    silently corrupting the recurrent state; exact-bucket prompts serve."""
+    cm = rflow.compile("recurrentgemma-2b", SERVE_SHAPE,
+                       FlowConfig(mode="folded", precision="fp32"),
+                       smoke=True)
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params,
+                 EngineConfig(max_batch=2, max_seq_len=64, block_size=8,
+                              prompt_buckets=(8, 64)))
+    with pytest.raises(ValueError, match="recurrent temporal-mixing"):
+        eng.run([Request("padded", np.arange(1, 6, dtype=np.int32),
+                         max_new_tokens=2)])
+    rep = eng.run([Request("exact", np.arange(1, 9, dtype=np.int32),
+                           max_new_tokens=2)])
+    assert rep.by_id["exact"].n_generated == 2
+
+
+def test_run_rejects_stateless_families():
+    cm = rflow.compile("lenet5", ShapeConfig("s", "prefill", 8, 2),
+                       FlowConfig(mode="folded", precision="fp32"))
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params, EngineConfig(max_batch=2, max_seq_len=16))
+    with pytest.raises(ValueError):
+        eng.run([Request("x", np.arange(1, 4), max_new_tokens=2)])
+
+
+# ---------------------------------------------------------------------------
+# engine-level autotune
+# ---------------------------------------------------------------------------
+
+def test_autotune_deterministic_on_host():
+    """Same profile, fresh caches: the compile-validated search must pick
+    the same flow every time (forced host devices, no wall-clock in the
+    ranking)."""
+    from repro.serving.autotune import ServingProfile, autotune_decode
+    prof = ServingProfile(name="det", batch_buckets=(2,), max_seq_len=32,
+                          block_sizes=(8,))
+    kw = dict(profile=prof, smoke=True, validate="compile",
+              tune_blocks=False, use_cache=False)
+    a = autotune_decode("llama3.2-1b", **kw)
+    b = autotune_decode("llama3.2-1b", **kw)
+    assert a.flow_for(2) == b.flow_for(2)
+    assert a.per_bucket[2].best.knob_str() == b.per_bucket[2].best.knob_str()
+
+
+def test_autotune_measure_returns_pinnable_flow():
+    """validate="measure" ranks survivors by measured step time and the
+    Engine pins the winner (the acceptance path)."""
+    from repro.serving.autotune import ServingProfile, autotune_decode
+    prof = ServingProfile(name="pin", batch_buckets=(2,), max_seq_len=32,
+                          block_sizes=(8, 16))
+    at = autotune_decode("llama3.2-1b", profile=prof, smoke=True,
+                         validate="measure", iters=1)
+    er = at.per_bucket[2]
+    assert er.validated and any("measured_step_s" in v for v in er.validated)
+    assert at.block_size in (8, 16)
+    eng = at.engine()
+    assert eng.plan.flow == at.flow_for(2)
+    rep = eng.run(synthetic_requests(3, at.cfg.vocab_size, prompt_len=6,
+                                     max_new_tokens=2, seed=0))
+    assert len(rep.results) == 3
+    assert "serving-autotune[" in at.describe()
+
+
+# ---------------------------------------------------------------------------
+# multi-device serving (runs under XLA_FLAGS=--xla_force_host_platform_
+# device_count=N; skipped on a single-device host)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 (forced) host devices")
+def test_run_multidevice_scheduler():
+    """Continuous batching with the decode cell compiled onto a dp mesh:
+    the scheduler's bucketed ticks ride the sharded executable."""
+    cm = rflow.compile("llama3.2-1b", SERVE_SHAPE,
+                       FlowConfig(mode="folded", precision="fp32"),
+                       mesh={"data": 2}, smoke=True)
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params,
+                 EngineConfig(max_batch=2, max_seq_len=64, block_size=8,
+                              batch_buckets=(2,)))
+    reqs = synthetic_requests(5, cm.cfg.vocab_size, prompt_len=8,
+                              max_new_tokens=3, seed=3)
+    rep = eng.run(reqs)
+    assert len(rep.results) == 5
+    assert rep.metrics["refills"] >= 1
+    assert all(r.n_generated == 3 for r in rep.results)
