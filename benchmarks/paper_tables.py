@@ -207,25 +207,43 @@ def table9_serving(concurrencies: Tuple[int, ...] = (1, 4, 16)
                    ) -> List[Tuple]:
     """Serving-subsystem throughput/latency: Engine.run (continuous batching
     over the paged KV pool) at 1/4/16 concurrent requests — tokens/s, p50 and
-    p95 request latency, and the loop's eviction/refill counts."""
+    p95 request latency, the loop's eviction/refill counts, and (for the
+    shared-prefix workload rows) the prefix-cache hit rate.
+
+    Two workloads per concurrency: independent random prompts (``uniform``,
+    prefix cache off — nothing to share) and a common-system-prompt batch
+    (``shared-prefix``) served with the prefix cache on, the workload the
+    block index + copy-on-write path exists for."""
     from repro import flow as rflow
     from repro.configs.base import ShapeConfig
-    from repro.serving import Engine, EngineConfig, synthetic_requests
+    from repro.serving import (Engine, EngineConfig, shared_prefix_requests,
+                               synthetic_requests)
     cfg = get_smoke("llama3.2-1b")
     cm = rflow.compile(cfg, ShapeConfig("bench_serve", "decode", 64, 4),
                        FlowConfig(mode="folded", precision="fp32"))
     params = cm.init_params(jax.random.PRNGKey(0))
-    ecfg = EngineConfig(max_batch=4, max_seq_len=64, block_size=8)
-    eng = Engine(cm, params, ecfg)
+    eng = Engine(cm, params,
+                 EngineConfig(max_batch=4, max_seq_len=64, block_size=8))
+    eng_px = Engine(cm, params,
+                    EngineConfig(max_batch=4, max_seq_len=64, block_size=8,
+                                 prefix_cache=True))
     rows = []
     for n in concurrencies:
-        reqs = synthetic_requests(n, cfg.vocab_size, prompt_len=8,
-                                  max_new_tokens=8, seed=n)
-        eng.run(reqs)          # warm the tick programs for this concurrency
-        m = eng.run(reqs).metrics
-        rows.append(("llama3.2-1b-smoke", n, m["tokens_per_s"],
-                     m["p50_latency_s"], m["p95_latency_s"],
-                     m["evictions"], m["refills"]))
+        for wl, e, reqs in (
+                ("uniform", eng,
+                 synthetic_requests(n, cfg.vocab_size, prompt_len=8,
+                                    max_new_tokens=8, seed=n)),
+                ("shared-prefix", eng_px,
+                 shared_prefix_requests(n, cfg.vocab_size, prefix_len=24,
+                                        tail_len=8, max_new_tokens=8,
+                                        seed=n))):
+            e.run(reqs)        # warm the tick programs for this concurrency
+            m = e.run(reqs).metrics
+            rows.append((f"llama3.2-1b-smoke/{wl}", n, m["tokens_per_s"],
+                         m["p50_latency_s"], m["p95_latency_s"],
+                         m["evictions"], m["refills"],
+                         m["prefix_hit_rate"],
+                         m["prefill_tokens_computed"]))
     return rows
 
 

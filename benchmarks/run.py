@@ -40,10 +40,12 @@ def main() -> None:
         print(f"table8/{name}/{label},{step * 1e6:.1f},"
               f"mem_per_dev={fp / 2 ** 30:.2f}GiB;bound={bound};"
               f"comm_bytes={comm:.3g}")
-    for name, n, tps, p50, p95, evi, ref in T.table9_serving():
+    for (name, n, tps, p50, p95, evi, ref, hit,
+         pf_tok) in T.table9_serving():
         print(f"table9/{name}/c{n},{p50 * 1e6:.0f},"
               f"tok_per_s={tps:.1f};p50_ms={p50 * 1e3:.1f};"
-              f"p95_ms={p95 * 1e3:.1f};evictions={evi};refills={ref}")
+              f"p95_ms={p95 * 1e3:.1f};evictions={evi};refills={ref};"
+              f"prefix_hit_rate={hit:.2f};prefill_tok={pf_tok}")
 
     res = os.path.join(os.path.dirname(__file__), "..", "results",
                        "dryrun_baseline.json")

@@ -68,11 +68,16 @@ def main():
         # fixed prompt lengths + an exact prompt bucket: on TPU the
         # flash-attention prefill masks by iota, so the engine (correctly)
         # refuses left-padded buckets there
+        total = args.prompt_len + args.steps
+        # block size must divide every prompt-bucket rung (EngineConfig
+        # validates); fall back through the pow2 ladder until one fits
+        block = next(b for b in (16, 8, 4, 2, 1)
+                     if args.prompt_len % b == 0 and total % b == 0)
         eng2 = Engine(cm, params, ECfg(
             max_batch=args.batch,
-            max_seq_len=args.prompt_len + args.steps,
-            prompt_buckets=(args.prompt_len, args.prompt_len + args.steps),
-            block_size=16))
+            max_seq_len=total,
+            prompt_buckets=(args.prompt_len, total),
+            block_size=block))
         reqs = synthetic_requests(2 * args.batch, cfg.vocab_size,
                                   prompt_len=args.prompt_len,
                                   max_new_tokens=args.steps,

@@ -150,6 +150,41 @@ def _paged_kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _copy_block_kernel(idx_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
+def copy_block(pool: jax.Array, src, dst, *,
+               interpret: bool = False) -> jax.Array:
+    """Copy pool block ``src`` over pool block ``dst`` — the serving
+    subsystem's copy-on-write fork.  ``pool`` is ``(NB, bs, KV, D)`` or the
+    folded ``(reps, NB, bs, KV, D)``; returns the pool with row ``dst``
+    replaced.
+
+    The block ids ride the scalar-prefetch channel so the BlockSpec
+    ``index_map`` aims one DMA per grid step straight at the source block,
+    and the pool operand is aliased to the output: only block ``dst`` moves,
+    not the pool."""
+    lead = pool.ndim == 5
+    p5 = pool if lead else pool[None]
+    R, NB, bs, KV, D = p5.shape
+    idx = jnp.stack([jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, 1, bs, KV, D),
+                               lambda r, idx: (r, idx[0], 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, bs, KV, D),
+                               lambda r, idx: (r, idx[1], 0, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _copy_block_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(p5.shape, p5.dtype),
+        input_output_aliases={1: 0},     # pool buffer updated in place
+        interpret=interpret)(idx, p5)
+    return out if lead else out[0]
+
+
 def paged_decode_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
                            bt: jax.Array, lens: jax.Array, *,
                            window: Optional[int] = None,

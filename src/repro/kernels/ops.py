@@ -47,6 +47,10 @@ def paged_decode_attention(q, kp, vp, bt, lens, *, window=None, softcap=None,
                                       softcap=softcap, interpret=interpret)
 
 
+def copy_block(pool, src, dst, *, interpret=False):
+    return _da.copy_block(pool, src, dst, interpret=interpret)
+
+
 def conv2d_fused(x, w, *, stride=1, padding="SAME", bn=None, act=None,
                  tile=None, interpret=False):
     # the tiling pass hands (block_h, block_c); a bare int means block_c only

@@ -105,6 +105,14 @@ def paged_decode_attention_ref(q, kp, vp, bt, lens, *, window=None,
     return o.reshape(B, 1, H, D).astype(dt)
 
 
+def copy_block_ref(pool, src, dst):
+    """Reference copy-on-write block copy (the registry's ``ref`` fallback):
+    pool row ``dst`` := pool row ``src``.  Handles the folded layout's
+    leading reps dimension (block axis is always ``-4``)."""
+    blk = jnp.take(pool, jnp.asarray(src, jnp.int32), axis=-4)
+    return pool.at[..., dst, :, :, :].set(blk)
+
+
 def conv2d_fused_ref(x, w, *, stride=1, padding="SAME", bn=None, act=None):
     y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32), (stride, stride),

@@ -209,11 +209,14 @@ def _register_builtin():
     # paged-KV serving path: the Pallas kernel gathers pool blocks through
     # the block table (scalar prefetch); the explicit ref entry is the
     # fallback the serving engine's decode uses off-TPU
-    from repro.kernels.ref import paged_decode_attention_ref
+    from repro.kernels.ref import copy_block_ref, paged_decode_attention_ref
     REGISTRY.register("paged_decode_attention", "pallas",
                       kops.paged_decode_attention)
     REGISTRY.register("paged_decode_attention", "ref",
                       paged_decode_attention_ref)
+    # prefix-cache copy-on-write fork: one pool block copied over another
+    REGISTRY.register("copy_block", "pallas", kops.copy_block)
+    REGISTRY.register("copy_block", "ref", copy_block_ref)
     REGISTRY.register(
         "conv2d", "pallas", kops.conv2d_fused,
         supports=lambda groups=1, **kw: groups == 1)

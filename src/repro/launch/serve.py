@@ -36,7 +36,8 @@ def _run_replay(args) -> None:
     ecfg = EngineConfig(temperature=args.temperature,
                         max_batch=args.max_batch,
                         max_seq_len=args.max_seq_len,
-                        block_size=args.block_size)
+                        block_size=args.block_size,
+                        prefix_cache=bool(args.prefix_cache))
     if args.serving_autotune:
         from repro.serving.autotune import ServingProfile, autotune_decode
         prof = ServingProfile(name="cli",
@@ -47,7 +48,12 @@ def _run_replay(args) -> None:
                              validate=args.validate)
         print(at.describe())
         cm = at.compile()
-        ecfg = at.engine_config(temperature=args.temperature)
+        ecfg = at.engine_config(
+            temperature=args.temperature,
+            # explicit --prefix-cache / --no-prefix-cache overrides the
+            # tuned pick; unset defers to the measured A/B
+            prefix_cache=at.prefix_cache if args.prefix_cache is None
+            else args.prefix_cache)
     else:
         shape = ShapeConfig("serve", "decode", args.max_seq_len,
                             args.max_batch)
@@ -64,6 +70,12 @@ def _run_replay(args) -> None:
         reqs = load_requests_jsonl(args.requests, cm.cfg.vocab_size)
     report = eng.run(reqs)
     print(eng.describe())
+    m = report.metrics
+    if m["prefix_cache"]:
+        print(f"prefix-cache hit rate: {m['prefix_hit_rate'] * 100:.1f}% "
+              f"({m['prefix_hits']} of {m['n_requests']} requests seeded; "
+              f"{m['prefill_tokens_computed']} of {m['prompt_tokens_total']} "
+              f"prompt tokens computed)")
     for r in report.results[: args.show]:
         print(f"  {r.rid}: prompt={r.prompt_len} -> {r.tokens} "
               f"({r.finish_reason}, {r.latency_s * 1e3:.0f}ms)")
@@ -94,6 +106,13 @@ def main():
                     help="per-request prompt+generation cap (replay mode)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged KV-cache block size (replay mode)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="share identical prompt prefixes across requests "
+                         "through the block index (copy-on-write; replay "
+                         "mode); the replay report includes the hit rate. "
+                         "Unset + --serving-autotune defers to the measured "
+                         "A/B; --no-prefix-cache forces it off")
     ap.add_argument("--serving-autotune", action="store_true",
                     help="search the decode-cell flow space per batch "
                          "bucket and pin the winner before replay")

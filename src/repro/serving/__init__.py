@@ -4,14 +4,22 @@
   loop, single-batch ``generate`` paths, metrics.
 * :mod:`repro.serving.scheduler` — request queue, admission control, slots.
 * :mod:`repro.serving.kvcache` — paged KV-cache manager (block pool, block
-  tables, prefill packing).
+  tables, prefill packing, the refcounting ledger behind prefix caching).
+* :mod:`repro.serving.prefix` — content-hashed prefix index (shared prompt
+  blocks, copy-on-write seeds for new requests).
 * :mod:`repro.serving.autotune` — engine-level decode autotune over the DSE.
 """
 from repro.serving.engine import Engine, EngineConfig, RunReport
-from repro.serving.kvcache import BlockPool, PagedKVCache
+from repro.serving.kvcache import (BlockLedger, BlockPool, PagedKVCache,
+                                   PrefixMatch)
+from repro.serving.prefix import PrefixIndex, block_hashes
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
-                                     load_requests_jsonl, synthetic_requests)
+                                     load_requests_jsonl,
+                                     shared_prefix_requests,
+                                     synthetic_requests)
 
-__all__ = ["Engine", "EngineConfig", "RunReport", "BlockPool", "PagedKVCache",
-           "Request", "RequestResult", "Scheduler", "load_requests_jsonl",
+__all__ = ["Engine", "EngineConfig", "RunReport", "BlockLedger", "BlockPool",
+           "PagedKVCache", "PrefixIndex", "PrefixMatch", "Request",
+           "RequestResult", "Scheduler", "block_hashes",
+           "load_requests_jsonl", "shared_prefix_requests",
            "synthetic_requests"]

@@ -56,6 +56,11 @@ class ServingProfile:
             raise ValueError("max_seq_len must be >= 1")
         if any(b < 1 or b > self.max_seq_len for b in self.block_sizes):
             raise ValueError("block sizes must be in [1, max_seq_len]")
+        if any(self.max_seq_len % b for b in self.block_sizes):
+            raise ValueError(
+                "every candidate block size must divide max_seq_len "
+                "(EngineConfig requires whole-block prompt buckets); got "
+                f"{self.block_sizes} vs max_seq_len={self.max_seq_len}")
 
     def shape_for(self, bucket: int) -> ShapeConfig:
         return ShapeConfig(f"{self.name}_decode{self.max_seq_len}_b{bucket}",
@@ -65,13 +70,16 @@ class ServingProfile:
 @dataclass
 class DecodeAutotune:
     """The autotune outcome the Engine pins: the measured-ranked flow per
-    batch bucket (and overall), plus the chosen KV block size."""
+    batch bucket (and overall), the chosen KV block size, and whether the
+    prefix cache pays for the profile's workload."""
     cfg: ModelConfig
     profile: ServingProfile
     per_bucket: Dict[int, Any]          # bucket -> dse.ExploreResult
     block_size: int
     block_times_us: Dict[int, float] = field(default_factory=dict)
     mesh: Any = None
+    prefix_cache: bool = False
+    prefix_times_s: Dict[str, float] = field(default_factory=dict)
 
     def _measured_per_token(self, bucket: int) -> Optional[float]:
         er = self.per_bucket[bucket]
@@ -117,7 +125,8 @@ class DecodeAutotune:
             max_batch=self.profile.batch_buckets[-1],
             max_seq_len=self.profile.max_seq_len,
             batch_buckets=tuple(self.profile.batch_buckets),
-            block_size=self.block_size)
+            block_size=self.block_size,
+            prefix_cache=self.prefix_cache)
         kw.update(overrides)
         return EngineConfig(**kw)
 
@@ -133,7 +142,8 @@ class DecodeAutotune:
     def describe(self) -> str:
         lines = [f"serving-autotune[{self.cfg.name} x {self.profile.name}] "
                  f"buckets={list(self.profile.batch_buckets)} "
-                 f"pin=b{self.best_bucket} block_size={self.block_size}"]
+                 f"pin=b{self.best_bucket} block_size={self.block_size} "
+                 f"prefix_cache={'on' if self.prefix_cache else 'off'}"]
         for b in self.profile.batch_buckets:
             er = self.per_bucket[b]
             t = self._measured_per_token(b)
@@ -143,6 +153,9 @@ class DecodeAutotune:
         if self.block_times_us:
             lines.append("  block_us: " + " ".join(
                 f"{k}:{v:.0f}" for k, v in sorted(self.block_times_us.items())))
+        if self.prefix_times_s:
+            lines.append("  prefix_replay_s: " + " ".join(
+                f"{k}:{v:.3f}" for k, v in sorted(self.prefix_times_s.items())))
         return "\n".join(lines)
 
 
@@ -191,6 +204,57 @@ def tune_block_size(cfg: ModelConfig, profile: ServingProfile, *,
     return best, times
 
 
+def tune_prefix_cache(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
+                      ) -> Tuple[bool, Dict[str, float]]:
+    """Measured A/B of the prefix-cache toggle on a shared-prefix replay of
+    the profile's envelope (the workload the cache is built for): serve the
+    same request batch with the cache on and off through a pinned Engine and
+    keep the faster setting.  Ties break toward *on* — equal wall time with
+    fewer prefill tokens computed is still a resource win (the paper's
+    on-chip-reuse argument).  Models the cache cannot serve exactly (extra
+    recurrent state) report ``off`` with no measurement."""
+    from repro.serving.engine import Engine
+    from repro.serving.kvcache import _state_entries
+    from repro.serving.scheduler import shared_prefix_requests
+    prof = at.profile
+    bs = at.block_size
+    max_new = max(2, min(8, prof.max_seq_len // 8))
+    # shared prefix: about half the envelope, block-aligned, plus a
+    # one-block tail so the whole prompt lands exactly on a prompt bucket
+    # (no left-padding — the workload must serve on pad-unsafe backends)
+    prefix_len = min(prof.max_seq_len // 2,
+                     prof.max_seq_len - max_new - bs) // bs * bs
+    if prefix_len < bs:
+        return False, {}          # envelope too small for any shared block
+    tail_len = bs
+    prompt_len = prefix_len + tail_len
+    n = max(4, 2 * prof.batch_buckets[-1])
+    cm = at.compile()
+    ents = _state_entries(cm.plan)
+    if any(not e.paged for e in ents):
+        # recurrent / cross-attention per-request state: a token-prefix
+        # match cannot seed it, the cache is off by construction
+        return False, {}
+    params = cm.init_params(jax.random.key(seed))
+    reqs = shared_prefix_requests(n, at.cfg.vocab_size,
+                                  prefix_len=prefix_len, tail_len=tail_len,
+                                  max_new_tokens=max_new, seed=seed)
+    buckets = tuple(sorted({prompt_len, prof.max_seq_len}))
+    times: Dict[str, float] = {}
+    for label, toggle in (("off", False), ("on", True)):
+        eng = Engine(cm, params,
+                     at.engine_config(prefix_cache=toggle,
+                                      prompt_buckets=buckets))
+        eng.run(reqs)                         # warm the tick programs
+        ts = []
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            ts.append(time.perf_counter() - t0)
+        times[label] = float(np.median(ts))
+    return times["on"] <= times["off"], times
+
+
 def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
                     base_flow: Optional[FlowConfig] = None,
                     mesh=None,
@@ -198,6 +262,7 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
                     iters: int = 3,
                     smoke: bool = False,
                     tune_blocks: bool = True,
+                    tune_prefix: Optional[bool] = None,
                     use_cache: bool = True) -> DecodeAutotune:
     """Search the flow design space for each decode cell of the serving
     profile and return the pinnable result.
@@ -208,7 +273,9 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
     reproducible tuning decisions in CI); ``"none"`` skips validation (the
     estimator ranking alone — cheapest).  ``mesh`` makes the dp/tp/pp
     factorization part of the search (or pins it, exactly as in
-    ``repro.flow.compile``)."""
+    ``repro.flow.compile``).  ``tune_prefix`` A/Bs the prefix-cache toggle
+    on a measured shared-prefix replay (default: only under
+    ``validate="measure"`` — it wall-clocks real engine runs)."""
     from repro.flow import _resolve_cfg
     if validate not in ("measure", "compile", "none"):
         raise ValueError(f"unknown validate mode {validate!r}")
@@ -242,6 +309,12 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
         block_size, block_times = tune_block_size(cfg, profile, iters=iters)
     else:
         block_size, block_times = profile.block_sizes[0], {}
-    return DecodeAutotune(cfg=cfg, profile=profile, per_bucket=per_bucket,
-                          block_size=block_size, block_times_us=block_times,
-                          mesh=mesh_obj)
+    at = DecodeAutotune(cfg=cfg, profile=profile, per_bucket=per_bucket,
+                        block_size=block_size, block_times_us=block_times,
+                        mesh=mesh_obj)
+    do_prefix = tune_prefix if tune_prefix is not None \
+        else validate == "measure"
+    if do_prefix:
+        at.prefix_cache, at.prefix_times_s = tune_prefix_cache(at,
+                                                               iters=iters)
+    return at

@@ -67,6 +67,14 @@ class EngineConfig:
     # paged KV pool
     block_size: int = 16
     num_blocks: Optional[int] = None  # pool size; None = full provisioning
+    # prefix caching (shared prompt blocks, copy-on-write); a match below
+    # min_ratio coverage is treated as a miss — the uncovered tail catches
+    # up one token per decode tick, so marginal hits would trade one
+    # batched prefill for a long sequential tail
+    prefix_cache: bool = False
+    prefix_cache_min_ratio: float = 0.5
+    # debugging/parity: keep the sampled-step logits on each RequestResult
+    capture_logits: bool = False
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -78,6 +86,8 @@ class EngineConfig:
             raise ValueError(f"block_size must be >=1, got {self.block_size}")
         if self.temperature < 0:
             raise ValueError("temperature must be >= 0")
+        if not 0.0 <= self.prefix_cache_min_ratio <= 1.0:
+            raise ValueError("prefix_cache_min_ratio must be in [0, 1]")
         if self.batch_buckets is None:
             self.batch_buckets = _pow2_ladder(1, self.max_batch)
         else:
@@ -91,7 +101,8 @@ class EngineConfig:
                     f"got {self.batch_buckets}")
         if self.prompt_buckets is None:
             self.prompt_buckets = _pow2_ladder(
-                min(8, self.max_seq_len), self.max_seq_len)
+                min(max(8, self.block_size), self.max_seq_len),
+                self.max_seq_len)
         else:
             self.prompt_buckets = tuple(sorted(set(int(b)
                                                    for b in self.prompt_buckets)))
@@ -102,6 +113,16 @@ class EngineConfig:
                     f"prompt buckets exceed max_seq_len={self.max_seq_len}")
             if self.prompt_buckets[-1] < self.max_seq_len:
                 self.prompt_buckets += (self.max_seq_len,)
+        # the paged pool packs prompt K/V block-by-block and the prefix
+        # index hashes block-aligned runs: every prompt-bucket rung (and
+        # hence max_seq_len, the final rung) must be a whole number of
+        # blocks, not just the envelope
+        bad = [b for b in self.prompt_buckets if b % self.block_size]
+        if bad:
+            raise ValueError(
+                f"block_size={self.block_size} must divide every prompt "
+                f"bucket; offending rungs {bad} (of "
+                f"{list(self.prompt_buckets)})")
 
     @property
     def blocks_per_slot(self) -> int:
@@ -120,7 +141,7 @@ class RunReport:
 
     def describe(self) -> str:
         m = self.metrics
-        return (
+        out = (
             f"serving[{m['n_requests']} req] "
             f"{m['generated_tokens']} tok in {m['wall_s']:.3f}s "
             f"({m['tokens_per_s']:.1f} tok/s)\n"
@@ -134,6 +155,17 @@ class RunReport:
             f"  kv-pool: {m['pool_blocks']} blocks x {m['block_size']} tok, "
             f"peak_used={m['peak_used_blocks']} "
             f"peak_live_tokens={m['peak_live_tokens']}")
+        if m.get("prefix_cache"):
+            out += (
+                f"\n  prefix-cache: hits={m['prefix_hits']}/"
+                f"{m['prefix_hits'] + m['prefix_misses']} "
+                f"hit_rate={m['prefix_hit_rate'] * 100:.1f}% "
+                f"(cached {m['prefix_cached_tokens']}/"
+                f"{m['prompt_tokens_total']} prompt tok) "
+                f"cow_forks={m['cow_forks']} "
+                f"cache_evictions={m['prefix_cache_evictions']} "
+                f"prefill_computed={m['prefill_tokens_computed']}")
+        return out
 
 
 class Engine:
@@ -174,16 +206,25 @@ class Engine:
         e = self.ecfg
         return PagedKVCache(self.plan, e.max_batch, block_size=e.block_size,
                             blocks_per_slot=e.blocks_per_slot,
-                            num_blocks=e.num_blocks)
+                            num_blocks=e.num_blocks,
+                            prefix_cache=e.prefix_cache,
+                            min_match_ratio=e.prefix_cache_min_ratio)
 
     def run(self, requests: Sequence[Request]) -> RunReport:
         """Serve ``requests`` to completion with continuous batching over
         the paged KV pool; returns per-request results + loop metrics
-        (also kept as ``self.last_report`` for ``describe()``)."""
+        (also kept as ``self.last_report`` for ``describe()``).
+
+        With ``prefix_cache=True`` admissions are matched against the block
+        index first: a hit seeds the slot's block table from shared blocks
+        and feeds only the uncovered prompt tail through decode ticks
+        (mid-sequence prefill — exact, byte-identical to the cold path),
+        with copy-on-write forks keeping shared blocks immutable."""
         e = self.ecfg
         cache = self.new_cache()
         sched = Scheduler(e.max_batch, e.block_size, cache.pool,
-                          max_seq_len=e.max_seq_len)
+                          max_seq_len=e.max_seq_len,
+                          prefix=cache if e.prefix_cache else None)
         for r in requests:
             sched.submit(r)
         # Left-padded (bucketed) prefill is only exact when every
@@ -201,6 +242,7 @@ class Engine:
         t0 = time.perf_counter()
         ticks = prefill_batches = 0
         peak_used = peak_live = 0
+        prefill_tokens = catchup_tokens = prompt_tokens_total = 0
 
         def evict_finished():
             for sidx in sched.finished():
@@ -208,9 +250,18 @@ class Engine:
                 sched.evict(sidx)
 
         while sched.has_work():
-            # 1. admit into freed slots: bucketed left-padded prefill
-            adm = sched.admissions()
-            if not adm and not sched.active_slots:
+            # 1. admit into freed slots: prefix-cache hits seed their block
+            #    tables from shared blocks (the uncovered tail catches up
+            #    through decode ticks); the rest take the bucketed
+            #    left-padded prefill
+            admitted = sched.admissions()
+            prompt_tokens_total += sum(a.request.prompt_len for a in admitted)
+            for a in admitted:
+                if a.covered:
+                    cache.admit_cached(a.slot, a.request.prompt,
+                                       a.reserve_tokens, a.match)
+            adm = [a for a in admitted if not a.covered]
+            if not admitted and not sched.active_slots:
                 # nothing running and the queue head still can't be admitted:
                 # its block budget exceeds the whole pool — fail loudly
                 # instead of spinning
@@ -259,22 +310,33 @@ class Engine:
                 for i, a in enumerate(adm):
                     cache.admit(a.slot, a.request.prompt_len,
                                 a.reserve_tokens, pstate, i,
-                                Sp - a.request.prompt_len)
+                                Sp - a.request.prompt_len,
+                                prompt=a.request.prompt)
+                    if e.capture_logits:
+                        sched.slots[a.slot].result.logits.append(
+                            np.asarray(logits[i, -1]))
                     sched.record_token(a.slot, int(toks[i]), first=True)
                 prefill_batches += 1
+                prefill_tokens += sum(a.request.prompt_len for a in adm)
                 peak_used = max(peak_used, cache.pool.used_blocks)
                 peak_live = max(peak_live, cache.live_tokens())
                 evict_finished()
 
-            # 2. one decode tick over the occupied slots (batch-bucketed)
+            # 2. one decode tick over the occupied slots (batch-bucketed).
+            #    Slots still catching up on an uncovered prompt tail feed
+            #    their next prompt token instead of the last sample — the
+            #    tick is simultaneously decode (for caught-up slots) and
+            #    mid-sequence prefill (for seeded ones).
             active = sched.active_slots
             if active:
                 B = bucket_for(sched.high_water, e.batch_buckets)
+                cache.prepare_decode(active)   # COW forks before any write
                 tokens = np.zeros((B, 1), np.int32)
                 positions = np.zeros((B, 1), np.int32)
                 for s in sched.slots[:B]:
                     if not s.free:
-                        tokens[s.index, 0] = s.last_token
+                        tokens[s.index, 0] = \
+                            s.pending[0] if s.pending else s.last_token
                         positions[s.index, 0] = s.pos
                 part = slice_state(cache.state, cache.slot_axes, B)
                 logits, new_part, _ = self.compiled.decode(
@@ -288,7 +350,23 @@ class Engine:
                 toks = np.asarray(
                     self._sample(logits[:, -1], k, e.temperature))
                 for sidx in active:
-                    sched.record_token(sidx, int(toks[sidx]))
+                    s = sched.slots[sidx]
+                    if s.pending:
+                        catchup_tokens += 1
+                        sched.note_catchup(sidx)
+                        if s.pending:      # tail not done: discard sample
+                            continue
+                        # prompt fully resident: index its blocks, and the
+                        # sample from the last tail token's logits is the
+                        # first generated token
+                        cache.register_prompt(sidx)
+                        if e.capture_logits:
+                            s.result.logits.append(np.asarray(logits[sidx, -1]))
+                        sched.record_token(sidx, int(toks[sidx]), first=True)
+                    else:
+                        if e.capture_logits:
+                            s.result.logits.append(np.asarray(logits[sidx, -1]))
+                        sched.record_token(sidx, int(toks[sidx]))
                 ticks += 1
                 peak_used = max(peak_used, cache.pool.used_blocks)
                 peak_live = max(peak_live, cache.live_tokens())
@@ -303,6 +381,7 @@ class Engine:
             return xs[min(len(xs) - 1, int(math.ceil(p * len(xs))) - 1)]
 
         gen = sum(r.n_generated for r in results)
+        led = cache.ledger
         report = RunReport(results=results, metrics={
             "n_requests": len(results),
             "generated_tokens": gen,
@@ -321,6 +400,18 @@ class Engine:
             "peak_used_blocks": peak_used,
             "peak_live_tokens": peak_live,
             "pool_bytes": cache.pool_bytes(),
+            # prefix-cache outcome (zeros when the toggle is off)
+            "prefix_cache": e.prefix_cache,
+            "prefix_hits": led.hits,
+            "prefix_misses": led.misses,
+            "prefix_cached_tokens": led.cached_tokens,
+            "prefix_cache_evictions": led.cache_evictions,
+            "cow_forks": led.cow_forks,
+            "prompt_tokens_total": prompt_tokens_total,
+            "prefill_tokens_computed": prefill_tokens + catchup_tokens,
+            "catchup_tokens": catchup_tokens,
+            "prefix_hit_rate": (led.cached_tokens / prompt_tokens_total
+                                if prompt_tokens_total else 0.0),
         })
         self.last_report = report
         return report
@@ -333,7 +424,8 @@ class Engine:
                  f"  serving: slots={e.max_batch} max_seq_len={e.max_seq_len} "
                  f"block={e.block_size} "
                  f"batch_buckets={list(e.batch_buckets)} "
-                 f"prompt_buckets={list(e.prompt_buckets)}"]
+                 f"prompt_buckets={list(e.prompt_buckets)} "
+                 f"prefix_cache={'on' if e.prefix_cache else 'off'}"]
         if self.last_report is not None:
             lines.append("  " +
                          self.last_report.describe().replace("\n", "\n  "))

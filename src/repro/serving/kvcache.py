@@ -22,16 +22,28 @@ Layout notes:
 * folded units carry the usual leading ``reps`` (layers) dimension on every
   leaf; block tables are replicated per layer (ints, negligible).
 
-The manager is the host side: a free-list allocator plus the device-side
-packing of prefill caches into pool blocks (`admit`) and slot recycling
-(`evict`).  The scheduler decides *when* to admit/evict; the engine wires
-both to the compiled model.
+Prefix caching (``prefix_cache=True``) layers block *sharing* on top:
+blocks are refcounted, fully-filled prompt blocks are registered in a
+:class:`repro.serving.prefix.PrefixIndex` keyed by chained content hashes,
+and a new request whose prompt prefix matches seeds its block table from
+the cached blocks and only computes the uncovered tail.  Shared blocks are
+copy-on-write: decode never writes a block with ``refcount > 1`` — the
+owner forks it first (``kernels/decode_attention.copy_block``, ref fallback
+through the registry).  Blocks whose last reference drops park on an LRU
+list, still indexed, and are reclaimed only under allocation pressure.
+
+The host/device split is explicit: :class:`BlockLedger` is the pure-host
+bookkeeping (pool, chains, index, match/charge/fork decisions — no jax, so
+the property-based suite can drive random interleavings against the real
+logic), and :class:`PagedKVCache` mirrors the ledger's decisions onto the
+device-resident pools and block tables.
 """
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +54,7 @@ import functools
 
 from repro.core.lowering import _op_state_shapes, _mk_state, unit_key
 from repro.core.plan import ExecutionPlan
+from repro.serving.prefix import BlockHash, PrefixIndex, block_hashes
 
 TRASH_BLOCK = 0
 
@@ -65,43 +78,403 @@ def _scatter_blocks_folded(pool, bidx, seg):
 # ---------------------------------------------------------------------------
 
 class BlockPool:
-    """Free-list allocator over pool block ids.  Block 0 is the trash block
-    and is never handed out."""
+    """Refcounted free-list allocator over pool block ids.
 
-    def __init__(self, num_blocks: int):
+    Block 0 is the trash block and is never handed out.  Every other block
+    is in exactly one of three states:
+
+    * **free** — on the free list, refcount 0, contents meaningless;
+    * **live** — refcount >= 1 (slot chains and COW spares hold the refs);
+    * **cached** — refcount 0 but still indexed by the prefix cache; parked
+      on an LRU list and reclaimed (oldest first, ``on_cache_evict`` fired
+      so the index can forget it) only when the free list runs dry.
+
+    ``allocate`` + ``release`` keep their original semantics for the
+    non-sharing paths: allocated blocks start at refcount 1, ``release``
+    decrements, and a double release raises.
+    """
+
+    def __init__(self, num_blocks: int,
+                 on_cache_evict: Optional[Callable[[int], None]] = None):
         if num_blocks < 2:
             raise ValueError("pool needs >= 2 blocks (one is the trash block)")
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._free_set = set(self._free)    # O(1) double-free detection
+        self._ref: Dict[int, int] = {}      # live blocks -> refcount
+        self._lru: "OrderedDict[int, None]" = OrderedDict()  # cached, ref 0
+        self._cached_tag: set = set()       # blocks the prefix index holds
+        self.on_cache_evict = on_cache_evict
+        self.n_cache_evictions = 0
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: truly free + reclaimable cached."""
+        return len(self._free) + len(self._lru)
 
     @property
     def used_blocks(self) -> int:
-        return (self.num_blocks - 1) - len(self._free)
+        """Live (referenced) blocks."""
+        return len(self._ref)
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._lru)
 
     def can_allocate(self, n: int) -> bool:
-        return n <= len(self._free)
+        return n <= self.free_blocks
 
     def allocate(self, n: int) -> List[int]:
         if not self.can_allocate(n):
             raise RuntimeError(
-                f"KV pool exhausted: want {n} blocks, {len(self._free)} free")
-        out = [self._free.pop() for _ in range(n)]
-        self._free_set.difference_update(out)
+                f"KV pool exhausted: want {n} blocks, {self.free_blocks} free")
+        out: List[int] = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+                self._free_set.discard(b)
+            else:                            # reclaim the LRU-oldest cached
+                b, _ = self._lru.popitem(last=False)
+                self._cached_tag.discard(b)
+                self.n_cache_evictions += 1
+                if self.on_cache_evict is not None:
+                    self.on_cache_evict(b)
+            self._ref[b] = 1
+            out.append(b)
         return out
+
+    def refcount(self, b: int) -> int:
+        return self._ref.get(b, 0)
+
+    def incref(self, b: int) -> None:
+        """Add a reference: live blocks bump the count, cached blocks are
+        revived off the LRU list.  Free blocks cannot be referenced."""
+        if b == TRASH_BLOCK:
+            raise ValueError("trash block cannot be referenced")
+        if b in self._ref:
+            self._ref[b] += 1
+        elif b in self._lru:
+            del self._lru[b]
+            self._ref[b] = 1
+        else:
+            raise ValueError(f"block {b} is free; cannot reference it")
+
+    def decref(self, b: int) -> None:
+        if b == TRASH_BLOCK:
+            raise ValueError("trash block cannot be released")
+        if b not in self._ref:
+            raise ValueError(f"double free of block {b}")
+        self._ref[b] -= 1
+        if self._ref[b] == 0:
+            del self._ref[b]
+            if b in self._cached_tag:        # indexed: park, most-recent
+                self._lru[b] = None
+            else:
+                self._free.append(b)
+                self._free_set.add(b)
 
     def release(self, blocks: List[int]) -> None:
         for b in blocks:
-            if b == TRASH_BLOCK:
-                raise ValueError("trash block cannot be released")
-            if b in self._free_set:
-                raise ValueError(f"double free of block {b}")
-            self._free.append(b)
-            self._free_set.add(b)
+            self.decref(b)
+
+    def mark_cached(self, b: int) -> None:
+        """The prefix index now points at ``b``: when its refcount drops to
+        zero it parks on the LRU list instead of the free list."""
+        if b == TRASH_BLOCK:
+            raise ValueError("trash block cannot be cached")
+        if b not in self._ref and b not in self._lru:
+            raise ValueError(f"block {b} is free; cannot cache it")
+        self._cached_tag.add(b)
+
+    def is_cached(self, b: int) -> bool:
+        return b in self._cached_tag
+
+    def check_invariants(self) -> None:
+        """Every block is in exactly one state; the trash block is in none;
+        counts conserve.  Raises AssertionError on violation (the
+        property-based suite calls this after every operation)."""
+        free, lru, live = set(self._free), set(self._lru), set(self._ref)
+        assert TRASH_BLOCK not in free | lru | live, "trash block leaked"
+        assert free == self._free_set and len(self._free) == len(free), \
+            "free list / free set diverged"
+        assert not (free & lru) and not (free & live) and not (lru & live), \
+            "block in two states at once"
+        assert free | lru | live == set(range(1, self.num_blocks)), \
+            "block count not conserved"
+        assert all(c >= 1 for c in self._ref.values()), "live refcount < 1"
+        assert self._cached_tag <= (lru | live), "cached tag on a free block"
+        assert lru <= self._cached_tag, "parked block without a cache tag"
+
+
+# ---------------------------------------------------------------------------
+# prefix matching + host-side ledger
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PrefixMatch:
+    """A locked prefix-cache hit: pool blocks (refcounts already bumped)
+    holding ``covered_raw`` prompt tokens, of which the engine may skip
+    ``covered`` (at least the last prompt token is always recomputed — its
+    logits seed sampling)."""
+    blocks: List[int]
+    hashes: List[BlockHash]
+    covered: int
+    covered_raw: int
+
+    @property
+    def needs_cow_spare(self) -> bool:
+        """True when the write at position ``covered`` lands inside a
+        matched block: the admission charges one spare block so the
+        copy-on-write fork can never fail on an exhausted pool."""
+        return self.covered_raw > self.covered
+
+
+class BlockLedger:
+    """Host-side accounting for one paged cache: the pool, per-slot block
+    chains, COW spares, and (optionally) the prefix index.
+
+    Pure bookkeeping — no jax — mirroring exactly the decisions
+    :class:`PagedKVCache` applies to device state, so property-based tests
+    can drive millions of admit/decode/finish/evict interleavings against
+    the real allocator logic.  Invariants are checked by :meth:`check`.
+    """
+
+    def __init__(self, num_blocks: int, n_slots: int, block_size: int,
+                 blocks_per_slot: int, *, prefix_cache: bool = False,
+                 min_match_ratio: float = 0.5):
+        self.block_size = block_size
+        self.blocks_per_slot = blocks_per_slot
+        self.n_slots = n_slots
+        self.min_match_ratio = min_match_ratio
+        self.pool = BlockPool(num_blocks, on_cache_evict=self._on_reclaim)
+        self.index: Optional[PrefixIndex] = \
+            PrefixIndex() if prefix_cache else None
+        self.chains: List[List[int]] = [[] for _ in range(n_slots)]
+        self.spares: List[Optional[int]] = [None] * n_slots
+        self.lens: List[int] = [0] * n_slots
+        self._prompt_len: List[int] = [0] * n_slots
+        self._prompt_hashes: List[List[Tuple[BlockHash, int]]] = \
+            [[] for _ in range(n_slots)]
+        self._registered: List[bool] = [False] * n_slots
+        # counters (surfaced through Engine metrics)
+        self.hits = 0
+        self.misses = 0
+        self.cached_tokens = 0
+        self.cow_forks = 0
+        # one-entry hash memo: a blocked queue head is re-matched every
+        # tick and a successful admission hashes right after its match —
+        # both repeat the same prompt back-to-back
+        self._hash_key: Optional[bytes] = None
+        self._hash_val: List[Tuple[BlockHash, int]] = []
+
+    def _hashes_for(self, toks: np.ndarray) -> List[Tuple[BlockHash, int]]:
+        key = toks.tobytes()
+        if key != self._hash_key:
+            self._hash_key = key
+            self._hash_val = block_hashes(toks, self.block_size)
+        return self._hash_val
+
+    # -- index plumbing ------------------------------------------------------
+    def _on_reclaim(self, block: int) -> None:
+        if self.index is not None:
+            self.index.drop_block(block)
+
+    @property
+    def cache_evictions(self) -> int:
+        return self.pool.n_cache_evictions
+
+    # -- matching ------------------------------------------------------------
+    def match_and_lock(self, prompt: np.ndarray) -> Optional[PrefixMatch]:
+        """Longest indexed prefix of ``prompt`` (full blocks, then an
+        exact-content partial tail).  Matched blocks are incref'd — locked
+        against reclaim — before this returns; callers either hand the match
+        to :meth:`admit` (which adopts the references) or :meth:`unlock` it.
+
+        ``covered`` is capped at ``len(prompt) - 1``: the last prompt token
+        is always recomputed through the decode cell so the engine has
+        logits to sample the first generated token from.
+
+        A marginal hit is a *miss*: the uncovered tail catches up one token
+        per decode tick, so a match covering less than ``min_match_ratio``
+        of the prompt would trade one batched prefill for a long sequential
+        tail — worse than serving cold.
+        """
+        if self.index is None:
+            return None
+        toks = np.asarray(prompt, np.int32).reshape(-1)
+        hashes = self._hashes_for(toks)
+        blocks: List[int] = []
+        hit_hashes: List[BlockHash] = []
+        covered_raw = 0
+        for h, end in hashes:
+            b = self.index.get(h)
+            if b is None:
+                break
+            blocks.append(b)
+            hit_hashes.append(h)
+            covered_raw = end
+        covered = min(covered_raw, int(toks.size) - 1)
+        if covered <= 0 or covered < self.min_match_ratio * int(toks.size):
+            return None
+        for b in blocks:
+            self.pool.incref(b)
+        return PrefixMatch(blocks=blocks, hashes=hit_hashes,
+                           covered=covered, covered_raw=covered_raw)
+
+    def unlock(self, match: PrefixMatch) -> None:
+        """Drop the locks of a match that will not be admitted."""
+        self.pool.release(match.blocks)
+
+    def fresh_blocks_needed(self, total_budget: int,
+                            match: Optional[PrefixMatch]) -> int:
+        """Admission-control charge: blocks to allocate for a request with
+        ``total_budget`` tokens given an (optional) locked match — the
+        uncovered chain tail plus, when the first write lands inside a
+        matched block, one COW spare."""
+        n_total = blocks_for_tokens(total_budget, self.block_size)
+        if match is None:
+            return n_total
+        return n_total - len(match.blocks) + int(match.needs_cow_spare)
+
+    # -- admit / decode / release -------------------------------------------
+    def admit(self, slot: int, prompt: np.ndarray, reserve_tokens: int,
+              match: Optional[PrefixMatch] = None) -> List[int]:
+        """Build ``slot``'s block chain: matched blocks (references adopted
+        from the lock) followed by freshly allocated ones, plus the COW
+        spare when charged.  Returns the chain.  The caller seeds device
+        block tables from it and sets the slot's decode position to
+        ``match.covered`` (0-covered requests prefill the whole prompt)."""
+        if self.chains[slot]:
+            raise RuntimeError(f"slot {slot} is occupied")
+        toks = np.asarray(prompt, np.int32).reshape(-1)
+        prompt_len = int(toks.size)
+        if reserve_tokens < prompt_len:
+            raise ValueError("reserve_tokens must cover the prompt")
+        if reserve_tokens > self.blocks_per_slot * self.block_size:
+            raise ValueError(
+                f"request needs {reserve_tokens} tokens; slot capacity is "
+                f"{self.blocks_per_slot * self.block_size} "
+                f"(blocks_per_slot x block_size)")
+        matched = list(match.blocks) if match is not None else []
+        # allocate exactly what admission charged (fresh_blocks_needed is
+        # the single source of the charge formula)
+        fresh = self.pool.allocate(
+            self.fresh_blocks_needed(reserve_tokens, match))
+        if match is not None and match.needs_cow_spare:
+            self.spares[slot] = fresh.pop()
+        self.chains[slot] = matched + fresh
+        self.lens[slot] = match.covered if match is not None else prompt_len
+        self._prompt_len[slot] = prompt_len
+        self._registered[slot] = False
+        if self.index is not None:
+            self._prompt_hashes[slot] = list(self._hashes_for(toks))
+            if match is not None:
+                self.hits += 1
+                self.cached_tokens += match.covered
+            else:
+                self.misses += 1
+        return self.chains[slot]
+
+    def needs_fork(self, slot: int) -> bool:
+        """Would the next decode write for ``slot`` land in a block some
+        other chain also references?  (The copy-on-write trigger.)"""
+        chain = self.chains[slot]
+        if not chain:
+            return False
+        ci = self.lens[slot] // self.block_size
+        return self.pool.refcount(chain[ci]) > 1
+
+    def fork(self, slot: int) -> Tuple[int, int, int]:
+        """Copy-on-write: repoint ``slot``'s write-target chain entry at its
+        pre-charged spare (or a fresh block) and drop the shared reference.
+        Returns ``(chain_index, old_block, new_block)`` — the caller copies
+        the device block contents and updates the block-table row."""
+        ci = self.lens[slot] // self.block_size
+        old = self.chains[slot][ci]
+        new = self.spares[slot]
+        if new is not None:
+            self.spares[slot] = None
+        else:
+            # defensive: admission charges a spare for every fork this
+            # ledger can produce, but keep the fallback for direct drivers
+            new = self.pool.allocate(1)[0]
+        self.chains[slot][ci] = new
+        self.pool.decref(old)
+        self.cow_forks += 1
+        return ci, old, new
+
+    def note_write(self, slot: int) -> None:
+        self.lens[slot] += 1
+
+    def register_prompt(self, slot: int) -> None:
+        """Index ``slot``'s fully-filled prompt blocks (call once the whole
+        prompt's K/V is resident: cold admits immediately after the prefill
+        scatter, prefix-seeded admits when catch-up completes).  The partial
+        tail block — still written by this slot's decode — is indexed later,
+        at :meth:`release`."""
+        if self.index is None:
+            return
+        self._registered[slot] = True
+        n_full = self._prompt_len[slot] // self.block_size
+        for i in range(n_full):
+            h, _ = self._prompt_hashes[slot][i]
+            if self.index.get(h) is None:
+                self.index.insert(h, self.chains[slot][i])
+                self.pool.mark_cached(self.chains[slot][i])
+
+    def release(self, slot: int) -> List[int]:
+        """Drop every reference ``slot`` holds (chain + unused COW spare);
+        blocks the index still points at park on the LRU list, the rest go
+        back to the free list.  The prompt's partial tail block is indexed
+        on the way out — its owner can no longer write it, so sharing it is
+        now safe.  Returns the released chain."""
+        chain = self.chains[slot]
+        if not chain:
+            return []
+        p_len = self._prompt_len[slot]
+        if self.index is not None and self._registered[slot] \
+                and p_len % self.block_size:
+            i = p_len // self.block_size
+            h, _ = self._prompt_hashes[slot][i]
+            if self.index.get(h) is None:
+                self.index.insert(h, chain[i])
+                self.pool.mark_cached(chain[i])
+        self.pool.release(chain)
+        if self.spares[slot] is not None:
+            self.pool.decref(self.spares[slot])
+            self.spares[slot] = None
+        self.chains[slot] = []
+        self.lens[slot] = 0
+        self._prompt_len[slot] = 0
+        self._prompt_hashes[slot] = []
+        self._registered[slot] = False
+        return chain
+
+    # -- invariants ----------------------------------------------------------
+    def check(self) -> None:
+        """The serving-state invariants the property suite hammers on:
+        pool-state conservation, refcounts == chain references, no chain or
+        spare on a freed/trash block, index entries only on live-or-parked
+        blocks."""
+        self.pool.check_invariants()
+        refs: Dict[int, int] = {}
+        for chain in self.chains:
+            for b in chain:
+                assert b != TRASH_BLOCK, "trash block in a chain"
+                refs[b] = refs.get(b, 0) + 1
+        for sp in self.spares:
+            if sp is not None:
+                assert sp != TRASH_BLOCK, "trash block as a COW spare"
+                refs[sp] = refs.get(sp, 0) + 1
+        assert set(refs) == set(self.pool._ref), \
+            "live blocks != blocks referenced by chains/spares"
+        for b, n in refs.items():
+            assert self.pool.refcount(b) == n, \
+                f"block {b}: refcount {self.pool.refcount(b)} != {n} refs"
+        if self.index is not None:
+            for _, b in self.index.items():
+                assert self.pool.refcount(b) > 0 or b in self.pool._lru, \
+                    f"index entry on freed block {b}"
 
 
 # ---------------------------------------------------------------------------
@@ -150,11 +523,19 @@ class PagedKVCache:
     slot dimension (-1 for pool leaves, which are slot-agnostic) so the
     engine can slice the tree down to a batch bucket and merge the result
     back (:func:`slice_state` / :func:`merge_state`).
+
+    With ``prefix_cache=True`` the host side runs through a refcounting
+    :class:`BlockLedger` + :class:`~repro.serving.prefix.PrefixIndex`:
+    :meth:`match_and_lock` finds shared prompt blocks, :meth:`admit` seeds
+    from them, and :meth:`prepare_decode` performs the copy-on-write forks
+    before each decode tick.
     """
 
     def __init__(self, plan: ExecutionPlan, n_slots: int, *,
                  block_size: int, blocks_per_slot: int,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 min_match_ratio: float = 0.5):
         if block_size < 1 or blocks_per_slot < 1 or n_slots < 1:
             raise ValueError("block_size, blocks_per_slot, n_slots must be >=1")
         self.plan = plan
@@ -166,14 +547,22 @@ class PagedKVCache:
         # plus the trash block; tighter pools exercise admission control
         self.num_blocks = num_blocks if num_blocks is not None \
             else 1 + n_slots * blocks_per_slot
-        self.pool = BlockPool(self.num_blocks)
-        self.slot_blocks: List[List[int]] = [[] for _ in range(n_slots)]
-        self._slot_len: List[int] = [0] * n_slots
+        self.prefix_cache = prefix_cache
         self._entries = _state_entries(plan)
         if not any(e.paged for e in self._entries):
             raise ValueError(
                 f"{plan.cfg.name} has no self-attention KV state; the paged "
                 "cache applies to attention decoder models")
+        if prefix_cache and any(not e.paged for e in self._entries):
+            raise ValueError(
+                f"{plan.cfg.name} carries non-attention per-request state "
+                "(recurrences or cross-attention K/V) that a token-prefix "
+                "match cannot seed; prefix_cache requires a pure attention "
+                "decoder")
+        self.ledger = BlockLedger(self.num_blocks, n_slots, block_size,
+                                  blocks_per_slot, prefix_cache=prefix_cache,
+                                  min_match_ratio=min_match_ratio)
+        self.pool = self.ledger.pool
         self.state, self.slot_axes = self._build()
 
     # -- construction --------------------------------------------------------
@@ -181,6 +570,11 @@ class PagedKVCache:
     def capacity_tokens(self) -> int:
         """Per-slot token capacity (block-table width x block size)."""
         return self.blocks_per_slot * self.block_size
+
+    @property
+    def slot_blocks(self) -> List[List[int]]:
+        """Per-slot block chains (host view; shared blocks included)."""
+        return self.ledger.chains
 
     def _build(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         plan, cfg = self.plan, self.cfg
@@ -219,7 +613,7 @@ class PagedKVCache:
     # -- accounting ----------------------------------------------------------
     def live_tokens(self) -> int:
         """Tokens currently resident across live slots (host view)."""
-        return int(sum(self._slot_len))
+        return int(sum(self.ledger.lens))
 
     def pool_bytes(self) -> int:
         """Device bytes held by the K/V pools (all layers)."""
@@ -232,9 +626,42 @@ class PagedKVCache:
             total += st["vp"].size * st["vp"].dtype.itemsize
         return total
 
+    # -- prefix matching (scheduler admission hooks) -------------------------
+    def match_and_lock(self, prompt: np.ndarray) -> Optional[PrefixMatch]:
+        return self.ledger.match_and_lock(prompt)
+
+    def unlock(self, match: PrefixMatch) -> None:
+        self.ledger.unlock(match)
+
+    def fresh_blocks_needed(self, total_budget: int,
+                            match: Optional[PrefixMatch]) -> int:
+        return self.ledger.fresh_blocks_needed(total_budget, match)
+
+    # -- per-slot device table plumbing --------------------------------------
+    def _set_tables(self, slot: int, table_row: np.ndarray,
+                    length: int) -> None:
+        table_row = jnp.asarray(table_row)
+        for e in self._entries:
+            if not e.paged:
+                continue
+            st = self.state[e.ukey][e.skey]
+            new = dict(st)
+            new["bt"] = (st["bt"].at[:, slot].set(table_row) if e.nlead
+                         else st["bt"].at[slot].set(table_row))
+            new["len"] = (st["len"].at[:, slot].set(length) if e.nlead
+                          else st["len"].at[slot].set(length))
+            self.state[e.ukey][e.skey] = new
+
+    def _table_row(self, slot: int) -> np.ndarray:
+        row = np.zeros(self.blocks_per_slot, np.int32)
+        chain = self.ledger.chains[slot]
+        row[:len(chain)] = chain
+        return row
+
     # -- admit / evict -------------------------------------------------------
     def admit(self, slot: int, prompt_len: int, reserve_tokens: int,
-              prefill_state: Dict[str, Any], row: int, pad: int) -> List[int]:
+              prefill_state: Dict[str, Any], row: int, pad: int,
+              prompt: Optional[np.ndarray] = None) -> List[int]:
         """Move request ``row`` of a (rolling-layout) prefill state into
         ``slot``: allocate its block chain, copy the prompt K/V into pool
         blocks, point the slot's block-table row at the chain, set its
@@ -242,28 +669,24 @@ class PagedKVCache:
         slot row.  ``pad`` is the request's left-padding inside the bucketed
         prefill batch; ``reserve_tokens`` (>= prompt_len) is the chain
         capacity to allocate up front (prompt + generation budget), the
-        admission-control quantity.
+        admission-control quantity.  ``prompt`` (token ids) feeds the prefix
+        index when prefix caching is on — the cold path; prefix-seeded
+        admissions go through :meth:`admit_cached` instead.
         """
-        if self.slot_blocks[slot]:
-            raise RuntimeError(f"slot {slot} is occupied")
-        if reserve_tokens < prompt_len:
-            raise ValueError("reserve_tokens must cover the prompt")
-        if reserve_tokens > self.capacity_tokens:
-            raise ValueError(
-                f"request needs {reserve_tokens} tokens; slot capacity is "
-                f"{self.capacity_tokens} (blocks_per_slot x block_size)")
+        if self.prefix_cache and prompt is None:
+            raise ValueError("prefix caching needs the prompt token ids")
+        toks = np.asarray(prompt, np.int32).reshape(-1) \
+            if prompt is not None else np.zeros(prompt_len, np.int32)
+        if toks.size != prompt_len:
+            raise ValueError(f"prompt has {toks.size} tokens, "
+                             f"prompt_len says {prompt_len}")
+        blocks = self.ledger.admit(slot, toks, reserve_tokens, match=None)
         bs = self.block_size
         nblk_used = blocks_for_tokens(prompt_len, bs)
-        n_alloc = blocks_for_tokens(reserve_tokens, bs)
-        blocks = self.pool.allocate(n_alloc)
-        self.slot_blocks[slot] = blocks
-        self._slot_len[slot] = prompt_len
 
-        table_row = np.zeros(self.blocks_per_slot, np.int32)
-        table_row[:n_alloc] = blocks
-        table_row = jnp.asarray(table_row)
         bidx = jnp.asarray(blocks[:nblk_used], jnp.int32)
         Lb = nblk_used * bs
+        table_row = self._table_row(slot)
 
         for e in self._entries:
             ust = self.state[e.ukey]
@@ -284,11 +707,6 @@ class PagedKVCache:
                     scatter = _scatter_blocks_folded if e.nlead \
                         else _scatter_blocks
                     new[pool_key] = scatter(st[pool_key], bidx, seg)
-                new["bt"] = (st["bt"].at[:, slot].set(table_row) if e.nlead
-                             else st["bt"].at[slot].set(table_row))
-                new["len"] = (st["len"].at[:, slot].set(prompt_len)
-                              if e.nlead
-                              else st["len"].at[slot].set(prompt_len))
                 ust[e.skey] = new
             elif e.op.op == "attention":               # cross-attn {k, v}
                 pst = prefill_state[e.ukey][e.skey]
@@ -308,35 +726,94 @@ class PagedKVCache:
                     leaf = ust[key]
                     ust[key] = (leaf.at[:, slot].set(rowv) if e.nlead
                                 else leaf.at[slot].set(rowv))
+        self._set_tables(slot, table_row, prompt_len)
+        # the whole prompt's K/V is resident: index its full blocks now
+        self.ledger.register_prompt(slot)
         return blocks
 
-    def note_decode_tick(self, active_slots) -> None:
-        """Mirror the device-side ``len`` increment for live slots (the
-        device increments every row; only live slots count as live tokens)."""
-        for s in active_slots:
-            self._slot_len[s] += 1
+    def admit_cached(self, slot: int, prompt: np.ndarray,
+                     reserve_tokens: int, match: PrefixMatch) -> List[int]:
+        """Prefix-cache hit admission: seed ``slot``'s block table from the
+        matched (locked) blocks plus a fresh tail, set its decode position
+        to ``match.covered``, and write *nothing* — the engine feeds the
+        uncovered prompt tail through decode ticks (mid-sequence prefill;
+        positions and the pool gather make it exact), sampling the first
+        generated token from the last tail token's logits."""
+        toks = np.asarray(prompt, np.int32).reshape(-1)
+        chain = self.ledger.admit(slot, toks, reserve_tokens, match=match)
+        self._set_tables(slot, self._table_row(slot), match.covered)
+        return chain
 
-    def evict(self, slot: int) -> int:
-        """Free ``slot``'s block chain and park it on the trash block.
-        Returns the number of blocks released."""
-        blocks = self.slot_blocks[slot]
-        if not blocks:
-            return 0
-        self.pool.release(blocks)
-        self.slot_blocks[slot] = []
-        self._slot_len[slot] = 0
+    def register_prompt(self, slot: int) -> None:
+        """Index the slot's fully-filled prompt blocks (the engine calls
+        this when a prefix-seeded request finishes catching up)."""
+        self.ledger.register_prompt(slot)
+
+    # -- copy-on-write -------------------------------------------------------
+    def prepare_decode(self, active_slots) -> int:
+        """Fork every active slot whose next write would land in a shared
+        block (refcount > 1): copy the block through the registry's
+        ``copy_block`` kernel and repoint the slot's table row.  Returns the
+        number of forks performed.  Must run before each decode tick —
+        decode never writes a block with refcount > 1."""
+        forks = 0
+        for s in active_slots:
+            if not self.ledger.chains[s]:
+                continue
+            if not self.ledger.needs_fork(s):
+                continue
+            ci, old, new = self.ledger.fork(s)
+            self._device_fork(s, ci, old, new)
+            forks += 1
+        return forks
+
+    def _device_fork(self, slot: int, chain_idx: int, old: int,
+                     new: int) -> None:
+        from repro.kernels.registry import REGISTRY, plan_kernel
+        kern = plan_kernel(self.plan, "copy_block")
+        if kern is not None:
+            fn, interpret = kern
+            copy = functools.partial(fn, interpret=interpret)
+        else:
+            ref = REGISTRY.get("copy_block", "ref").fn
+            copy = _copy_block_ref_jit(ref)
         for e in self._entries:
             if not e.paged:
                 continue
             st = self.state[e.ukey][e.skey]
-            zrow = jnp.zeros((self.blocks_per_slot,), jnp.int32)
-            new = dict(st)
-            new["bt"] = (st["bt"].at[:, slot].set(zrow) if e.nlead
-                         else st["bt"].at[slot].set(zrow))
-            new["len"] = (st["len"].at[:, slot].set(0) if e.nlead
-                          else st["len"].at[slot].set(0))
-            self.state[e.ukey][e.skey] = new
-        return len(blocks)
+            new_st = dict(st)
+            new_st["kp"] = copy(st["kp"], old, new)
+            new_st["vp"] = copy(st["vp"], old, new)
+            new_st["bt"] = (st["bt"].at[:, slot, chain_idx].set(new)
+                            if e.nlead
+                            else st["bt"].at[slot, chain_idx].set(new))
+            self.state[e.ukey][e.skey] = new_st
+
+    # -- decode progress -----------------------------------------------------
+    def note_decode_tick(self, active_slots) -> None:
+        """Mirror the device-side ``len`` increment for live slots (the
+        device increments every row; only live slots count as live tokens)."""
+        for s in active_slots:
+            self.ledger.note_write(s)
+
+    def evict(self, slot: int) -> int:
+        """Free ``slot``'s block chain and park it on the trash block.
+        Cached (indexed) blocks stay resident on the pool's LRU list until
+        allocation pressure reclaims them.  Returns the number of blocks
+        the slot referenced."""
+        chain = self.ledger.release(slot)
+        if not chain:
+            return 0
+        self._set_tables(slot, np.zeros(self.blocks_per_slot, np.int32), 0)
+        return len(chain)
+
+
+@functools.lru_cache(maxsize=4)
+def _copy_block_ref_jit(ref_fn):
+    """Donated jit wrapper around the reference copy_block so the host-side
+    COW fork updates the pool buffer in place."""
+    return jax.jit(lambda pool, src, dst: ref_fn(pool, src, dst),
+                   donate_argnums=(0,))
 
 
 # ---------------------------------------------------------------------------

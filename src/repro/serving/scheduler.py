@@ -13,6 +13,16 @@ Shape bucketing lives here too (:func:`bucket_for`): prompt lengths and
 batch sizes are rounded up to a fixed ladder so every tick reuses a jitted
 program instead of retracing (the serving analogue of the paper's fixed
 accelerator shapes).
+
+Prefix caching hooks in at admission: when the engine hands the scheduler a
+``prefix`` object (the paged cache), each queued prompt is matched against
+the block index *before* the block charge is computed — a request is charged
+only for its uncovered blocks (plus one copy-on-write spare when its first
+write lands inside a shared block), and the matched blocks are locked
+(refcounted) the moment the admission decision is made, so an eviction
+racing the same tick can never reclaim them.  A prefix-seeded slot carries
+``pending`` — the uncovered prompt tail the engine feeds through decode
+ticks (mid-sequence prefill) before sampling begins.
 """
 from __future__ import annotations
 
@@ -64,6 +74,9 @@ class RequestResult:
     t_admit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    # filled only under EngineConfig.capture_logits: the logits row each
+    # recorded token was sampled from (parity/debug tooling)
+    logits: List[Any] = field(default_factory=list)
 
     @property
     def n_generated(self) -> int:
@@ -100,6 +113,7 @@ class Slot:
     pos: int = 0                       # current decode position (tokens cached)
     last_token: int = 0
     served: int = 0                    # lifetime occupants (refill counting)
+    pending: List[int] = field(default_factory=list)  # uncovered prompt tail
 
     @property
     def free(self) -> bool:
@@ -111,18 +125,24 @@ class Admission:
     slot: int
     request: Request
     reserve_tokens: int
+    covered: int = 0                   # prompt tokens seeded from the cache
+    match: Any = None                  # locked PrefixMatch (engine consumes)
 
 
 class Scheduler:
     """Slot-based continuous batching over a block-pool budget."""
 
     def __init__(self, n_slots: int, block_size: int, pool: BlockPool, *,
-                 max_seq_len: int, clock: Callable[[], float] = time.monotonic):
+                 max_seq_len: int, clock: Callable[[], float] = time.monotonic,
+                 prefix: Any = None):
         self.n_slots = n_slots
         self.block_size = block_size
         self.pool = pool
         self.max_seq_len = max_seq_len
         self.clock = clock
+        # prefix-cache hooks (duck-typed: the PagedKVCache / BlockLedger):
+        # match_and_lock / unlock / fresh_blocks_needed
+        self.prefix = prefix
         # queue entries carry their own submit timestamp (the same Request
         # object may be submitted more than once)
         self.queue: Deque[Tuple[Request, float]] = deque()
@@ -160,32 +180,63 @@ class Scheduler:
     def admissions(self) -> List[Admission]:
         """Pop requests into free slots while admission control passes:
         a free slot AND enough free pool blocks for the request's whole
-        budget (prompt + max_new).  FIFO — a blocked head blocks the queue
-        (no starvation of large requests)."""
+        budget (prompt + max_new) — with prefix caching, only the blocks the
+        cache doesn't already hold.  FIFO — a blocked head blocks the queue
+        (no starvation of large requests).  Matched blocks are locked here,
+        at decision time, so same-tick allocation pressure cannot evict
+        them before the engine seeds the slot."""
         out: List[Admission] = []
         free = [s for s in self.slots if s.free]
-        budget = self.pool.free_blocks
+        reserved = 0                   # blocks promised, not yet allocated
         while self.queue and free:
             req, t_submit = self.queue[0]
-            need = blocks_for_tokens(req.total_budget, self.block_size)
-            if need > budget:
+            match = None
+            if self.prefix is not None:
+                match = self.prefix.match_and_lock(req.prompt)
+                need = self.prefix.fresh_blocks_needed(req.total_budget,
+                                                       match)
+                if match is not None and \
+                        need > self.pool.free_blocks - reserved:
+                    # a hit must never make a request *less* admittable
+                    # than cold (locking matched blocks removes them from
+                    # the allocatable count and the COW spare adds a
+                    # block): drop the match and retry as a cold admission
+                    self.prefix.unlock(match)
+                    match = None
+                    need = blocks_for_tokens(req.total_budget,
+                                             self.block_size)
+            else:
+                need = blocks_for_tokens(req.total_budget, self.block_size)
+            if need > self.pool.free_blocks - reserved:
                 break
             self.queue.popleft()
-            budget -= need
+            reserved += need
             slot = free.pop(0)
             if slot.served > 0:
                 self.n_refills += 1
             slot.served += 1
             slot.request = req
-            slot.pos = req.prompt_len
+            covered = match.covered if match is not None else 0
+            slot.pos = covered if covered else req.prompt_len
+            slot.pending = req.prompt[covered:].tolist() if covered else []
             slot.result = RequestResult(
                 rid=req.rid, prompt_len=req.prompt_len,
                 t_submit=t_submit, t_admit=self.clock())
             self.n_admitted += 1
-            out.append(Admission(slot.index, req, req.total_budget))
+            out.append(Admission(slot.index, req, req.total_budget,
+                                 covered=covered, match=match))
         return out
 
     # -- decode progress -----------------------------------------------------
+    def note_catchup(self, slot_idx: int) -> None:
+        """One uncovered prompt-tail token was fed through a decode tick
+        (mid-sequence prefill): consume it and advance the position without
+        recording a generated token."""
+        slot = self.slots[slot_idx]
+        assert slot.pending, f"slot {slot_idx} has no pending prompt tail"
+        slot.pending.pop(0)
+        slot.pos += 1
+
     def record_token(self, slot_idx: int, token: int, *,
                      first: bool = False) -> None:
         slot = self.slots[slot_idx]
@@ -225,6 +276,7 @@ class Scheduler:
         slot.result = None
         slot.pos = 0
         slot.last_token = 0
+        slot.pending = []
         self.n_evicted += 1
         return res
 
@@ -246,6 +298,24 @@ def synthetic_requests(n: int, vocab_size: int, *, prompt_len: int = 8,
             rid=f"req{i}",
             prompt=rng.randint(0, vocab_size, pl).astype(np.int32),
             max_new_tokens=max_new_tokens))
+    return out
+
+
+def shared_prefix_requests(n: int, vocab_size: int, *, prefix_len: int = 24,
+                           tail_len: int = 8, max_new_tokens: int = 8,
+                           seed: int = 0) -> List[Request]:
+    """``n`` requests sharing one random system prompt of ``prefix_len``
+    tokens, each with its own random ``tail_len``-token tail — the
+    prefix-cache benchmark/test workload (every request after the first can
+    seed ``prefix_len`` tokens from the block index)."""
+    rng = np.random.RandomState(seed)
+    system = rng.randint(0, vocab_size, prefix_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.randint(0, vocab_size, tail_len).astype(np.int32)
+        out.append(Request(rid=f"sp{i}",
+                           prompt=np.concatenate([system, tail]),
+                           max_new_tokens=max_new_tokens))
     return out
 
 

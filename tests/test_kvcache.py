@@ -49,6 +49,58 @@ def test_pool_double_free_rejected():
         pool.release([TRASH_BLOCK])
 
 
+def test_pool_refcounts_share_and_release():
+    pool = BlockPool(4)
+    (b,) = pool.allocate(1)
+    pool.incref(b)                          # a second chain references b
+    assert pool.refcount(b) == 2
+    pool.decref(b)
+    assert pool.refcount(b) == 1 and pool.used_blocks == 1
+    pool.decref(b)                          # last reference -> free
+    assert pool.refcount(b) == 0 and pool.free_blocks == 3
+    with pytest.raises(ValueError):
+        pool.decref(b)                      # double free
+    with pytest.raises(ValueError):
+        pool.incref(b)                      # free blocks can't be referenced
+    with pytest.raises(ValueError):
+        pool.incref(TRASH_BLOCK)
+    pool.check_invariants()
+
+
+def test_pool_cached_blocks_park_and_revive():
+    """An indexed (mark_cached) block parks on the LRU list at refcount 0 —
+    still counted allocatable — and revives through incref."""
+    pool = BlockPool(4)
+    a, b = pool.allocate(2)
+    pool.mark_cached(a)
+    pool.release([a, b])
+    assert pool.cached_blocks == 1 and pool.free_blocks == 3
+    pool.incref(a)                          # revive off the LRU list
+    assert pool.refcount(a) == 1 and pool.cached_blocks == 0
+    pool.decref(a)                          # parks again (still tagged)
+    assert pool.cached_blocks == 1
+    pool.check_invariants()
+
+
+def test_pool_lru_reclaim_order_and_callback():
+    """Allocation pressure reclaims parked blocks oldest-first, firing the
+    eviction callback; the free list is always preferred."""
+    seen = []
+    pool = BlockPool(4, on_cache_evict=seen.append)
+    a, b, c = pool.allocate(3)
+    for x in (a, b, c):
+        pool.mark_cached(x)
+    pool.release([b])                       # parked order: b, then a
+    pool.release([a])
+    pool.release([c])                       # order: b, a, c
+    got = pool.allocate(3)                  # no free blocks -> all reclaims
+    assert got == [b, a, c]                 # LRU order
+    assert seen == [b, a, c]
+    assert pool.n_cache_evictions == 3
+    assert not pool.is_cached(b)            # reclaim drops the tag
+    pool.check_invariants()
+
+
 def test_blocks_for_tokens():
     assert blocks_for_tokens(1, 8) == 1
     assert blocks_for_tokens(8, 8) == 1
@@ -164,3 +216,21 @@ def test_engine_config_validation():
     # a partial prompt ladder is padded up to the envelope
     e = EngineConfig(max_seq_len=64, prompt_buckets=(16,))
     assert e.prompt_buckets == (16, 64)
+
+
+def test_engine_config_block_size_divides_every_prompt_bucket():
+    """Regression: block_size must divide every prompt-bucket rung, not just
+    fit the envelope — the paged pool packs prompts block-by-block and the
+    prefix index hashes block-aligned runs."""
+    with pytest.raises(ValueError, match="divide every prompt bucket"):
+        EngineConfig(max_seq_len=64, block_size=8, prompt_buckets=(12, 64))
+    with pytest.raises(ValueError, match="divide every prompt bucket"):
+        # the default pow2 ladder itself can't satisfy a non-pow2 block
+        EngineConfig(max_seq_len=64, block_size=12)
+    with pytest.raises(ValueError, match="divide every prompt bucket"):
+        # max_seq_len is the final rung: it must be whole blocks too
+        EngineConfig(max_seq_len=100, block_size=16)
+    e = EngineConfig(max_seq_len=64, block_size=16)
+    assert all(b % 16 == 0 for b in e.prompt_buckets)
+    # the default ladder starts at the block size, never below it
+    assert e.prompt_buckets[0] == 16

@@ -1,0 +1,248 @@
+"""Property-based serving-state invariants (hypothesis).
+
+Block aliasing is the easiest place to corrupt serving state, so the
+refcounting allocator + prefix index get hammered with random interleavings
+of admit / decode / finish / evict against the *real* host-side ledger
+(:class:`repro.serving.kvcache.BlockLedger` — the exact object the engine
+mirrors onto device state), checking after every step:
+
+* no double-free (the pool raises; conservation would also catch it),
+* ``free + cached + live == pool size - 1`` (trash excluded) and every
+  live refcount equals the number of chain/spare references,
+* no slot's chain references a freed block,
+* the trash block is never allocated, referenced, cached or chained,
+* LRU eviction only ever reclaims unreferenced (parked) blocks,
+* prefix matches never cover the whole prompt (the last token is always
+  recomputed for its logits) and only ever return locked, live blocks.
+
+The suite is deterministic (``derandomize=True``) so CI failures reproduce;
+run it with ``--hypothesis-show-statistics`` to see example counts.
+"""
+import os
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.kvcache import (BlockLedger, TRASH_BLOCK,  # noqa: E402
+                                   blocks_for_tokens)
+from repro.serving.prefix import block_hashes  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+# fixed-seed profile for CI: 500+ deterministic examples per property
+settings.register_profile(
+    "serving-ci", settings(max_examples=500, derandomize=True, deadline=None))
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "serving-ci"))
+
+BS = 4                 # block size
+BPS = 6                # blocks per slot -> 24-token capacity
+SLOTS = 3
+MAX_NEW = 3
+
+
+def _prompt(seed: int, length: int) -> np.ndarray:
+    # a 2-token alphabet makes identical prefixes (and hence index hits,
+    # shared partial tails and COW forks) common instead of vanishing
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, 2, length).astype(np.int32)
+
+
+class Harness:
+    """Drives a BlockLedger through the engine's host-side discipline:
+    admit (match -> charge -> seed), decode ticks (fork-before-write,
+    catch-up then generate), finish/evict — without any device state."""
+
+    def __init__(self, num_blocks: int, prefix_cache: bool):
+        self.led = BlockLedger(num_blocks, SLOTS, BS, BPS,
+                               prefix_cache=prefix_cache)
+        self.prefix_cache = prefix_cache
+        # per live slot: target total tokens (prompt + generated budget)
+        self.target = [0] * SLOTS
+        self.prompt_len = [0] * SLOTS
+        self.forks_seen = 0
+
+    # -- engine-loop mirror --------------------------------------------------
+    def admit(self, seed: int, length: int, max_new: int) -> bool:
+        free = [s for s in range(SLOTS) if not self.led.chains[s]]
+        if not free:
+            return False
+        slot = free[0]
+        prompt = _prompt(seed, length)
+        budget = length + max_new
+        if budget > BPS * BS:
+            return False
+        match = self.led.match_and_lock(prompt) if self.prefix_cache else None
+        need = self.led.fresh_blocks_needed(budget, match)
+        if need > self.led.pool.free_blocks:
+            if match is not None:
+                self.led.unlock(match)
+            return False
+        self.led.admit(slot, prompt, budget, match=match)
+        self.target[slot] = budget
+        self.prompt_len[slot] = length
+        if match is None:
+            # cold path: the prefill scatter makes the whole prompt resident
+            self.led.register_prompt(slot)
+        return True
+
+    def tick(self) -> None:
+        """One decode tick over every live slot: COW forks first (decode
+        never writes a block with refcount > 1), then the write."""
+        for s in range(SLOTS):
+            if not self.led.chains[s]:
+                continue
+            if self.led.lens[s] >= self.target[s] - 1:
+                continue               # budget reached; waiting for evict
+            if self.led.needs_fork(s):
+                ci, old, new = self.led.fork(s)
+                assert old != new and new != TRASH_BLOCK
+                self.forks_seen += 1
+            ci = self.led.lens[s] // BS
+            blk = self.led.chains[s][ci]
+            assert self.led.pool.refcount(blk) == 1 or not self.prefix_cache, \
+                "decode would write a shared block"
+            self.led.note_write(s)
+            if self.led.lens[s] == self.prompt_len[s]:
+                # catch-up complete: the prompt is fully resident
+                self.led.register_prompt(s)
+
+    def finish(self, which: int) -> None:
+        live = [s for s in range(SLOTS) if self.led.chains[s]]
+        if not live:
+            return
+        slot = live[which % len(live)]
+        self.led.release(slot)
+        self.target[slot] = self.prompt_len[slot] = 0
+
+    def step(self, op) -> None:
+        kind = op[0]
+        if kind == 0:
+            self.admit(seed=op[1], length=op[2], max_new=op[3])
+        elif kind == 1:
+            self.tick()
+        else:
+            self.finish(op[1])
+        self.led.check()
+
+
+OPS = st.one_of(
+    st.tuples(st.just(0), st.integers(0, 7), st.integers(1, 20),
+              st.integers(1, MAX_NEW)),
+    st.tuples(st.just(1)),
+    st.tuples(st.just(2), st.integers(0, SLOTS - 1)),
+)
+SCRIPTS = st.lists(OPS, min_size=1, max_size=40)
+POOLS = st.integers(8, 1 + SLOTS * BPS)
+
+
+@given(script=SCRIPTS, num_blocks=POOLS)
+def test_interleavings_preserve_invariants_prefix_on(script, num_blocks):
+    """The headline property: random admit/decode/finish interleavings with
+    prefix caching + COW sharing never break conservation, refcounts, chain
+    validity or the trash block."""
+    h = Harness(num_blocks, prefix_cache=True)
+    for op in script:
+        h.step(op)
+    # drain: everything releases cleanly and nothing leaks
+    for s in range(SLOTS):
+        if h.led.chains[s]:
+            h.led.release(s)
+    h.led.check()
+    assert h.led.pool.used_blocks == 0
+
+
+@given(script=SCRIPTS, num_blocks=POOLS)
+def test_interleavings_preserve_invariants_prefix_off(script, num_blocks):
+    """Same machine with sharing disabled: the refcounting pool must degrade
+    to the plain free-list allocator (refcounts all 1, nothing cached)."""
+    h = Harness(num_blocks, prefix_cache=False)
+    for op in script:
+        h.step(op)
+        assert h.led.pool.cached_blocks == 0
+        assert all(h.led.pool.refcount(b) == 1
+                   for chain in h.led.chains for b in chain)
+    assert h.forks_seen == 0
+
+
+@given(script=SCRIPTS)
+def test_trash_block_never_allocated_or_refcounted(script):
+    h = Harness(1 + SLOTS * BPS, prefix_cache=True)
+    for op in script:
+        h.step(op)
+        assert h.led.pool.refcount(TRASH_BLOCK) == 0
+        assert not h.led.pool.is_cached(TRASH_BLOCK)
+        for chain in h.led.chains:
+            assert TRASH_BLOCK not in chain
+
+
+@given(script=SCRIPTS, num_blocks=st.integers(8, 14))
+def test_lru_eviction_only_reclaims_unreferenced(script, num_blocks):
+    """Under a deliberately tight pool, cached blocks are reclaimed — but
+    only ever blocks no chain or spare references, and their index entries
+    are dropped at reclaim time (led.check() verifies no index entry ever
+    points at a free block afterwards)."""
+    h = Harness(num_blocks, prefix_cache=True)
+    n_reclaims = [0]
+
+    def hook(b):
+        assert h.led.pool.refcount(b) == 0, "reclaimed a referenced block"
+        assert all(b not in chain for chain in h.led.chains), \
+            "reclaimed a chained block"
+        assert b not in h.led.spares, "reclaimed a COW spare"
+        n_reclaims[0] += 1
+        h.led._on_reclaim(b)     # the ledger's own hook: drop index entries
+
+    h.led.pool.on_cache_evict = hook
+    for op in script:
+        h.step(op)
+    h.led.check()
+
+
+@given(seed=st.integers(0, 50), length=st.integers(2, BPS * BS - MAX_NEW))
+def test_match_never_covers_whole_prompt(seed, length):
+    """After a cold request is served and evicted, re-matching its exact
+    prompt hits — but always leaves >= 1 token to recompute (its logits
+    seed sampling), and every matched block is locked (refcount 1)."""
+    h = Harness(1 + SLOTS * BPS, prefix_cache=True)
+    assert h.admit(seed, length, MAX_NEW)
+    for _ in range(MAX_NEW + length):
+        h.tick()
+    h.finish(0)
+    prompt = _prompt(seed, length)
+    match = h.led.match_and_lock(prompt)
+    assert match is not None, "identical prompt must hit after eviction"
+    assert match.covered == length - 1
+    assert match.covered_raw == length
+    assert match.needs_cow_spare
+    for b in match.blocks:
+        assert h.led.pool.refcount(b) == 1
+    h.led.unlock(match)
+    h.led.check()
+
+
+@given(seed=st.integers(0, 20), cut=st.integers(1, 15))
+def test_block_hash_chain_is_prefix_sensitive(seed, cut):
+    """Chained hashes: equal digests imply equal *prefixes* — perturbing any
+    earlier token changes every later digest."""
+    prompt = _prompt(seed, 16)
+    other = prompt.copy()
+    other[cut % prompt.size] ^= 1
+    ha = block_hashes(prompt, BS)
+    hb = block_hashes(other, BS)
+    flip_block = (cut % prompt.size) // BS
+    for i, ((da, ea), (db, eb)) in enumerate(zip(ha, hb)):
+        assert ea == eb
+        if i < flip_block:
+            assert da == db
+        else:
+            assert da != db
+
+
+def test_blocks_for_tokens_matches_charge():
+    led = BlockLedger(20, 2, BS, BPS, prefix_cache=False)
+    for budget in range(1, BPS * BS + 1):
+        assert led.fresh_blocks_needed(budget, None) == \
+            blocks_for_tokens(budget, BS)

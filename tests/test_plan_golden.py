@@ -18,7 +18,7 @@ BASE_TILES = ("{'matmul': (128, 128, 128), 'attention': (128, 128), "
 # KernelRegistry resolution on the CPU test platform: "auto" resolves every
 # accelerable op to the reference backend (Pallas is chosen on TPU only)
 KERNELS = ("  kernels: backend=auto attention=ref conv2d=ref "
-           "decode_attention=ref glu_matmul=ref matmul=ref "
+           "copy_block=ref decode_attention=ref glu_matmul=ref matmul=ref "
            "paged_decode_attention=ref rg_lru=ref")
 
 GOLDEN = {

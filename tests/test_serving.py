@@ -11,7 +11,8 @@ import pytest
 from repro import flow as rflow
 from repro.configs.base import FlowConfig, ShapeConfig
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.scheduler import Request, synthetic_requests
+from repro.serving.scheduler import (Request, shared_prefix_requests,
+                                     synthetic_requests)
 
 from conftest import SMOKE_SHAPE, smoke_batch
 
@@ -264,6 +265,210 @@ def test_run_rejects_stateless_families():
     eng = Engine(cm, params, EngineConfig(max_batch=2, max_seq_len=16))
     with pytest.raises(ValueError):
         eng.run([Request("x", np.arange(1, 4), max_new_tokens=2)])
+
+
+# ---------------------------------------------------------------------------
+# prefix caching: parity under sharing + adversarial scheduler scenarios
+# ---------------------------------------------------------------------------
+
+def _run_pair(reqs, *, capture=False, **ecfg_kw):
+    """The same request batch served cold (prefix_cache=False) and with the
+    prefix cache on; returns both reports."""
+    cm, params = _serve_cm()
+    kw = dict(max_batch=2, max_seq_len=64, block_size=8,
+              capture_logits=capture)
+    kw.update(ecfg_kw)
+    off = Engine(cm, params, EngineConfig(prefix_cache=False, **kw)).run(reqs)
+    on = Engine(cm, params, EngineConfig(prefix_cache=True, **kw)).run(reqs)
+    return off, on
+
+
+def _assert_results_identical(off, on):
+    """Per-request tokens AND the logits each token was sampled from must be
+    byte-identical between the cold and prefix-cached runs.  Matched by
+    request id — eviction order may differ (a cache hit samples its first
+    token one tick later than a same-wave cold admission)."""
+    assert set(off.by_id) == set(on.by_id)
+    for rid, a in off.by_id.items():
+        b = on.by_id[rid]
+        assert a.tokens == b.tokens, f"request {rid} diverged"
+        assert len(a.logits) == len(b.logits) > 0
+        for la, lb in zip(a.logits, b.logits):
+            np.testing.assert_array_equal(la, lb)
+
+
+def test_prefix_hit_with_cow_fork_matches_cold_byte_identical():
+    """A request served via prefix-cache hits — including two simultaneous
+    requests forking the same shared partial tail block mid-block — produces
+    byte-identical logits to the cold path.  (a, b) warm the cache; (c, d)
+    admit together, both seed the full + partial blocks, and the first
+    decode write forks the shared partial (COW)."""
+    cm, params = _serve_cm()
+    rng = np.random.RandomState(21)
+    p = rng.randint(0, cm.cfg.vocab_size, 12).astype(np.int32)  # 1.5 blocks
+    reqs = lambda: [Request(x, p, max_new_tokens=4) for x in "abcd"]
+    off, on = _run_pair(reqs(), capture=True, prompt_buckets=(16, 64))
+    _assert_results_identical(off, on)
+    m = on.metrics
+    assert m["prefix_hits"] >= 2            # c and d seed from the cache
+    assert m["cow_forks"] >= 1              # shared partial block forked
+    assert m["prefill_tokens_computed"] < off.metrics["prefill_tokens_computed"]
+
+
+def test_prefix_entirely_cached_prompt_zero_block_prefill():
+    """A prompt that is entirely a cached prefix: block-aligned, fully
+    matched — the request allocates only generation-budget blocks, joins no
+    prefill batch (zero-block prefill; one catch-up decode recomputes the
+    last token's logits), and still matches the cold path byte-for-byte."""
+    cm, params = _serve_cm()
+    rng = np.random.RandomState(22)
+    p = rng.randint(0, cm.cfg.vocab_size, 16).astype(np.int32)  # 2 full blocks
+    # max_batch=1 serializes: 'a' warms + evicts, then 'b' admits alone
+    off, on = _run_pair(
+        [Request("a", p, max_new_tokens=3), Request("b", p, max_new_tokens=3)],
+        capture=True, max_batch=1, prompt_buckets=(16, 64))
+    _assert_results_identical(off, on)
+    m = on.metrics
+    assert m["prefix_hits"] == 1
+    assert m["prefill_batches"] == 1        # 'b' never joined a prefill batch
+    assert m["catchup_tokens"] == 1         # only the recomputed last token
+    assert m["prefix_cached_tokens"] == 15  # covered caps at prompt_len - 1
+
+
+def test_prefix_parity_shared_prefix_batch():
+    """Mixed workload parity: a shared system prompt with distinct tails
+    (the hit path re-enters mid-block at a non-block-aligned position) —
+    tokens and sampled-step logits byte-identical to the cold run."""
+    cm, params = _serve_cm()
+    reqs = lambda: shared_prefix_requests(6, cm.cfg.vocab_size, prefix_len=24,
+                                          tail_len=6, max_new_tokens=3,
+                                          seed=31)
+    off, on = _run_pair(reqs(), capture=True, max_batch=2)
+    _assert_results_identical(off, on)
+    assert on.metrics["prefix_hits"] >= 4
+    assert on.metrics["prefix_hit_rate"] > 0.3
+
+
+def test_prefix_admission_under_nearly_full_pool():
+    """Adversarial: a pool too small for two cold requests still admits a
+    cache hit (it is charged only for uncovered blocks) — and refuses to
+    double-book blocks when eviction pressure races admission in the same
+    tick (the matched blocks are locked at decision time)."""
+    cm, params = _serve_cm()
+    rng = np.random.RandomState(23)
+    p = rng.randint(0, cm.cfg.vocab_size, 16).astype(np.int32)
+    # 6 allocatable blocks: a cold 16+8 request needs 3; two cold ones need
+    # 6 -> the pool fits them only serially.  With the prefix cache, 'b'
+    # charges 1 fresh block + 1 COW spare and shares the other two.
+    ecfg = EngineConfig(max_batch=2, max_seq_len=64, block_size=8,
+                        num_blocks=7, prefix_cache=True,
+                        prompt_buckets=(16, 64))
+    eng = Engine(cm, params, ecfg)
+    rep = eng.run([Request("a", p, max_new_tokens=8),
+                   Request("b", p, max_new_tokens=8),
+                   Request("c", p, max_new_tokens=8)])
+    assert len(rep.results) == 3
+    assert all(r.n_generated == 8 for r in rep.results)
+    assert rep.metrics["prefix_hits"] >= 1
+    assert rep.metrics["peak_used_blocks"] <= 6
+
+
+def test_prefix_eviction_racing_admission_same_tick():
+    """Adversarial: allocation pressure in the same tick as a cache-hit
+    admission must reclaim only unlocked cached blocks — the run completes
+    with every request byte-identical to its cold serve."""
+    cm, params = _serve_cm()
+    rng = np.random.RandomState(24)
+    shared = rng.randint(0, cm.cfg.vocab_size, 16).astype(np.int32)
+    fresh = [rng.randint(0, cm.cfg.vocab_size, 16).astype(np.int32)
+             for _ in range(3)]
+    reqs = lambda: [Request("s0", shared, max_new_tokens=3),
+                    Request("f0", fresh[0], max_new_tokens=3),
+                    Request("s1", shared, max_new_tokens=3),
+                    Request("f1", fresh[1], max_new_tokens=3),
+                    Request("f2", fresh[2], max_new_tokens=3),
+                    Request("s2", shared, max_new_tokens=3)]
+    # 8 allocatable blocks, each request needs <= 3: cached blocks from
+    # finished requests must be reclaimed to admit the fresh prompts while
+    # 's*' hits lock theirs
+    off, on = _run_pair(reqs(), capture=True, num_blocks=9,
+                        prompt_buckets=(16, 64))
+    _assert_results_identical(off, on)
+    assert on.metrics["prefix_hits"] >= 1
+    assert on.metrics["prefix_cache_evictions"] >= 1
+
+
+def test_prefix_hit_never_blocks_an_admittable_request():
+    """Regression: when the match-inclusive charge (locked blocks leave the
+    allocatable count, + a COW spare) exceeds the pool but the *cold* charge
+    fits, the scheduler must drop the match and admit cold — a cache hit
+    must never make a servable request unadmittable."""
+    cm, params = _serve_cm()
+    rng = np.random.RandomState(25)
+    p = rng.randint(0, cm.cfg.vocab_size, 16).astype(np.int32)
+    # 6 allocatable blocks; prompt 16 + 32 new = 48 tok = exactly 6 blocks.
+    # After 'a' serves, its 2 prompt blocks are indexed; a naive hit charge
+    # for 'b' is 6-2+1=5 fresh vs 4 unlocked-free -> must fall back to cold
+    reqs = [Request("a", p, max_new_tokens=32),
+            Request("b", p, max_new_tokens=32)]
+    ecfg = dict(max_batch=2, max_seq_len=64, block_size=8, num_blocks=7,
+                prompt_buckets=(16, 64))
+    off = Engine(cm, params, EngineConfig(prefix_cache=False, **ecfg)).run(reqs)
+    on = Engine(cm, params, EngineConfig(prefix_cache=True, **ecfg)).run(reqs)
+    assert [len(r.tokens) for r in on.results] == [32, 32]
+    for rid in "ab":
+        assert off.by_id[rid].tokens == on.by_id[rid].tokens
+
+
+def test_prefix_marginal_match_treated_as_miss():
+    """A match covering less than prefix_cache_min_ratio of the prompt is a
+    miss: the request takes the batched prefill instead of a long
+    one-token-per-tick catch-up tail."""
+    cm, params = _serve_cm()
+    rng = np.random.RandomState(26)
+    head = rng.randint(0, cm.cfg.vocab_size, 8).astype(np.int32)
+    long_tail = rng.randint(0, cm.cfg.vocab_size, 24).astype(np.int32)
+    ecfg = dict(max_batch=1, max_seq_len=64, block_size=8,
+                prompt_buckets=(8, 32, 64))
+    # 'warm' indexes the 8-token head; 'probe' shares only that one block
+    # of its 32-token prompt (25% < the 0.5 default) -> cold prefill
+    eng = Engine(cm, params, EngineConfig(prefix_cache=True, **ecfg))
+    rep = eng.run([Request("warm", head, max_new_tokens=2),
+                   Request("probe", np.concatenate([head, long_tail]),
+                           max_new_tokens=2)])
+    assert rep.metrics["prefix_hits"] == 0
+    assert rep.metrics["catchup_tokens"] == 0
+    # the same probe with the threshold off takes the marginal hit
+    eng2 = Engine(cm, params, EngineConfig(prefix_cache=True,
+                                           prefix_cache_min_ratio=0.0,
+                                           **ecfg))
+    rep2 = eng2.run([Request("warm", head, max_new_tokens=2),
+                     Request("probe", np.concatenate([head, long_tail]),
+                             max_new_tokens=2)])
+    assert rep2.metrics["prefix_hits"] == 1
+    assert rep2.metrics["catchup_tokens"] == 24
+    assert rep.by_id["probe"].tokens == rep2.by_id["probe"].tokens
+
+
+@pytest.mark.slow
+def test_shared_prefix_replay_acceptance():
+    """The acceptance loop: 16 requests with a common system prompt served
+    through the prefix cache compute < 50% of the prefill tokens of the
+    no-cache run, with byte-identical per-request logits."""
+    cm, params = _serve_cm()
+    reqs = lambda: shared_prefix_requests(16, cm.cfg.vocab_size,
+                                          prefix_len=24, tail_len=8,
+                                          max_new_tokens=4, seed=7)
+    off, on = _run_pair(reqs(), capture=True, max_batch=4)
+    _assert_results_identical(off, on)
+    m = on.metrics
+    assert m["prefill_tokens_computed"] < \
+        0.5 * off.metrics["prefill_tokens_computed"]
+    assert m["prefix_hits"] >= 12
+    d = Engine(cm, params, EngineConfig(max_batch=4, max_seq_len=64,
+                                        block_size=8, prefix_cache=True))
+    d.run(reqs())
+    assert "prefix-cache:" in d.describe() and "hit_rate=" in d.describe()
 
 
 # ---------------------------------------------------------------------------
