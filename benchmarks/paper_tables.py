@@ -203,25 +203,45 @@ def table8_sharded_vs_unsharded() -> List[Tuple]:
     return rows
 
 
+_SERVING_METRIC_KEYS = (
+    "tokens_per_s", "p50_latency_s", "p95_latency_s",
+    "p50_ttft_s", "p95_ttft_s", "evictions", "refills",
+    "prefix_hit_rate", "prefill_tokens_computed", "catchup_tokens",
+    "host_syncs", "host_syncs_per_token", "fori_segments")
+
+
+def _serving_row(name: str, n: int, metrics: Dict) -> Dict:
+    row = {"name": name, "concurrency": n}
+    row.update({k: metrics[k] for k in _SERVING_METRIC_KEYS})
+    return row
+
+
+def _serve_compiled():
+    from repro import flow as rflow
+    from repro.configs.base import ShapeConfig
+    cfg = get_smoke("llama3.2-1b")
+    cm = rflow.compile(cfg, ShapeConfig("bench_serve", "decode", 64, 4),
+                       FlowConfig(mode="folded", precision="fp32"))
+    params = cm.init_params(jax.random.PRNGKey(0))
+    return cfg, cm, params
+
+
 def table9_serving(concurrencies: Tuple[int, ...] = (1, 4, 16)
-                   ) -> List[Tuple]:
+                   ) -> List[Dict]:
     """Serving-subsystem throughput/latency: Engine.run (continuous batching
     over the paged KV pool) at 1/4/16 concurrent requests — tokens/s, p50 and
-    p95 request latency, the loop's eviction/refill counts, and (for the
-    shared-prefix workload rows) the prefix-cache hit rate.
+    p95 request latency and TTFT, host syncs per generated token, the loop's
+    eviction/refill counts, and (for the shared-prefix workload rows) the
+    prefix-cache hit rate.  Rows are dicts (machine-readable: they land in
+    BENCH_serving.json verbatim).
 
     Two workloads per concurrency: independent random prompts (``uniform``,
     prefix cache off — nothing to share) and a common-system-prompt batch
     (``shared-prefix``) served with the prefix cache on, the workload the
     block index + copy-on-write path exists for."""
-    from repro import flow as rflow
-    from repro.configs.base import ShapeConfig
     from repro.serving import (Engine, EngineConfig, shared_prefix_requests,
                                synthetic_requests)
-    cfg = get_smoke("llama3.2-1b")
-    cm = rflow.compile(cfg, ShapeConfig("bench_serve", "decode", 64, 4),
-                       FlowConfig(mode="folded", precision="fp32"))
-    params = cm.init_params(jax.random.PRNGKey(0))
+    cfg, cm, params = _serve_compiled()
     eng = Engine(cm, params,
                  EngineConfig(max_batch=4, max_seq_len=64, block_size=8))
     eng_px = Engine(cm, params,
@@ -239,12 +259,59 @@ def table9_serving(concurrencies: Tuple[int, ...] = (1, 4, 16)
                                         seed=n))):
             e.run(reqs)        # warm the tick programs for this concurrency
             m = e.run(reqs).metrics
-            rows.append((f"llama3.2-1b-smoke/{wl}", n, m["tokens_per_s"],
-                         m["p50_latency_s"], m["p95_latency_s"],
-                         m["evictions"], m["refills"],
-                         m["prefix_hit_rate"],
-                         m["prefill_tokens_computed"]))
+            rows.append(_serving_row(f"llama3.2-1b-smoke/{wl}", n, m))
     return rows
+
+
+def table9_mixed_traffic(n_long: int = 6, n_short: int = 18) -> Dict:
+    """Mixed-traffic A/B: long cold prompts interleaved with short
+    decode-heavy requests, served by the PR-5-era baseline engine
+    (batched prefill, per-tick host loop) and by the chunked + host-free
+    configuration (``chunked_prefill`` catch-up riding decode ticks,
+    ``fori_seg`` on-device segments).  The optimized run must improve p95
+    TTFT and cut host syncs per generated token — the wins this PR's two
+    perf paths exist for."""
+    from repro.serving import Engine, EngineConfig, Request
+    cfg, cm, params = _serve_compiled()
+    vocab = cfg.vocab_size
+
+    def requests(seed=0):
+        rng = np.random.RandomState(seed)
+        longs = [Request(f"long{i}",
+                         rng.randint(0, vocab, 48).astype(np.int32),
+                         max_new_tokens=4) for i in range(n_long)]
+        shorts = [Request(f"short{i}",
+                          rng.randint(0, vocab, 8).astype(np.int32),
+                          max_new_tokens=24) for i in range(n_short)]
+        out, si, per = [], 0, max(1, n_short // max(n_long, 1))
+        for lg in longs:
+            out.append(lg)
+            out.extend(shorts[si:si + per])
+            si += per
+        out.extend(shorts[si:])
+        return out
+
+    kw = dict(max_batch=4, max_seq_len=64, block_size=8,
+              prompt_buckets=(8, 48, 64))
+    configs = {
+        "baseline": EngineConfig(**kw),
+        "optimized": EngineConfig(**kw, chunked_prefill=True, chunk_size=8,
+                                  fori_seg=8),
+    }
+    out: Dict = {"workload": {
+        "n_long": n_long, "long_prompt": 48, "long_new_tokens": 4,
+        "n_short": n_short, "short_prompt": 8, "short_new_tokens": 24}}
+    for label, ecfg in configs.items():
+        eng = Engine(cm, params, ecfg)
+        eng.run(requests())                   # warm the tick programs
+        m = eng.run(requests()).metrics
+        out[label] = _serving_row(f"llama3.2-1b-smoke/mixed/{label}",
+                                  n_long + n_short, m)
+    out["p95_ttft_improved"] = (out["optimized"]["p95_ttft_s"]
+                                < out["baseline"]["p95_ttft_s"])
+    out["host_syncs_reduced"] = (out["optimized"]["host_syncs_per_token"]
+                                 < out["baseline"]["host_syncs_per_token"])
+    return out
 
 
 def table5_comparison() -> List[Tuple]:

@@ -357,6 +357,33 @@ def op_attention(ctx: Ctx, op, p, q, k, v, positions):
         kp, vp, bt, ln = st["kp"], st["vp"], st["bt"], st["len"]
         bs = kp.shape[1]
         nblk = bt.shape[1]
+        if Sq > 1:
+            # paged multi-query (chunked catch-up): row b scores a chunk of
+            # Sq = k freshly written tokens at absolute positions
+            # ``positions[b]`` against its pool blocks.  Entries < 0 are
+            # padding (decode rows advancing one token, drained tails):
+            # their K/V writes are aimed at pool block 0 — the trash block
+            # no live request owns — and their attention rows are masked to
+            # zero and discarded by the engine.
+            pos = positions.astype(jnp.int32)            # (B, Sq)
+            act = pos >= 0
+            safe = jnp.where(act, pos, 0)
+            rows = jnp.arange(B)
+            blk = jnp.where(act, bt[rows[:, None], (safe // bs) % nblk], 0)
+            off = jnp.where(act, safe % bs, 0)
+            kp = kp.at[blk, off].set(k.astype(kp.dtype))
+            vp = vp.at[blk, off].set(v.astype(vp.dtype))
+            ctx.state_out[skey] = {"kp": kp, "vp": vp, "bt": bt,
+                                   "len": ln + act.sum(1).astype(jnp.int32)}
+            kern = plan_kernel(ctx.plan, "paged_decode_attention")
+            if kern is not None:
+                fn, interpret = kern
+                return fn(q, kp, vp, bt, ln, qpos=pos, window=window,
+                          softcap=softcap, interpret=interpret)
+            from repro.kernels.registry import REGISTRY
+            ref = REGISTRY.get("paged_decode_attention", "ref").fn
+            return ref(q, kp, vp, bt, ln, qpos=pos, window=window,
+                       softcap=softcap, compute_dtype=ctx.compute_dtype)
         rows = jnp.arange(B)
         blk = bt[rows, (ln // bs) % nblk]            # (B,) pool block ids
         off = ln % bs

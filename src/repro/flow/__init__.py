@@ -230,6 +230,50 @@ class CompiledModel:
 
         return self._stage(f"generate_fori[{S}+{steps}]", build)(params, batch)
 
+    def decode_segment(self, steps: int, *,
+                       temperature: float = 0.0) -> Callable:
+        """Jitted host-free multi-tick decode over externally managed state
+        (the serving engine's paged KV pool):
+
+            run(params, state, tok0, pos0, rng) -> (tokens, new_state, rng)
+
+        ``tok0``/``pos0`` are (B,) int32 — each row's last sampled token and
+        its absolute position; ``tokens`` is (B, steps).  The body replays
+        the engine's per-tick host loop exactly — decode cell, then one
+        ``jax.random.split`` per tick, then sample — so the produced tokens
+        are byte-identical to ``steps`` host ticks (including the rng stream
+        at temperature > 0), with a single device round-trip for the whole
+        segment instead of one per token.  ``state`` is donated."""
+        apply = self.apply
+        sample = self._sample
+
+        def build():
+            def run(params, state, tok0, pos0, rng):
+                B = tok0.shape[0]
+                toks = jnp.zeros((B, steps), jnp.int32)
+
+                def body(t, carry):
+                    toks, state, rng, cur, pos = carry
+                    lg, state, _ = apply(
+                        params, {"tokens": cur[:, None],
+                                 "positions": pos[:, None]},
+                        state=state, cache_index=jnp.int32(0), mode="decode")
+                    rng, k = jax.random.split(rng)
+                    nxt = sample(lg[:, -1], k, temperature)
+                    toks = jax.lax.dynamic_update_slice_in_dim(
+                        toks, nxt[:, None], t, axis=1)
+                    return toks, state, rng, nxt, pos + 1
+
+                toks, state, rng, _, _ = jax.lax.fori_loop(
+                    0, steps, body, (toks, state, rng, tok0, pos0))
+                return toks, state, rng
+
+            with self._mesh_ctx():
+                return jax.jit(run, donate_argnums=(1,))
+
+        return self._stage(
+            f"decode_segment[T={steps},temp={temperature}]", build)
+
     # -- measured-time validation --------------------------------------------
     def _measure_inputs(self, seed: int = 0) -> Dict[str, Any]:
         """Concrete random inputs matching the cell's abstract shapes."""

@@ -9,6 +9,17 @@ max / sum / output) lives in VMEM scratch across the K grid axis.
 Sliding windows skip K blocks wholly outside [q_lo - window, q_hi]; causal
 masking skips blocks above the diagonal (the analogue of not generating
 hardware for loop iterations that are statically dead).
+
+Masking is positional: per-row position arrays for queries and keys ride
+into the kernel as (1, bq) / (1, bk) VMEM rows, with padded entries carrying
+-1 (masked as keys, garbage-and-discarded as queries).  Callers that pass no
+``positions`` get broadcast aranges — bit-identical to index-space masking —
+while the serving engine's left-padded bucketed prefill passes per-row
+shifted aranges (``arange(S) - pad``), making bucketed prefill exact on the
+Pallas path.  The static block-skip tests stay in index space, which is
+valid precisely because each row's q and k positions share one shift: the
+positions contract is *per-row monotone shifted arange*, not arbitrary
+per-token positions.
 """
 from __future__ import annotations
 
@@ -23,9 +34,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            nk: int, bq: int, bk: int, causal: bool, window: Optional[int],
-            softcap: Optional[float], scale: float, kv_len: int,
+def _kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, nk: int, bq: int, bk: int, causal: bool,
+            window: Optional[int], softcap: Optional[float], scale: float,
             q_offset: int):
     i = pl.program_id(2)
     kb = pl.program_id(3)
@@ -36,9 +47,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # static block skips run in index space: with per-row shifted-arange
+    # positions, kpos <= qpos iff k_idx <= q_idx (the shift cancels), so a
+    # block dead under the index-space test is dead under the positional
+    # mask too
     q_lo = i * bq + q_offset
     k_lo = kb * bk
-    # skip K blocks wholly dead under the causal/window masks
     run = jnp.asarray(True)
     if causal:
         run = jnp.logical_and(run, k_lo <= q_lo + bq - 1)
@@ -52,9 +66,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
-        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        valid = kpos < kv_len
+        qpos = qp_ref[0][:, None]                      # (bq, 1)
+        kpos = kp_ref[0][None, :]                      # (1, bk)
+        valid = kpos >= 0                              # pad keys masked
         if causal:
             valid &= kpos <= qpos
         if window:
@@ -77,6 +91,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    positions: Optional[jax.Array] = None,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     tile: Tuple[int, int] = (256, 512),
@@ -84,10 +99,36 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     interpret: bool = False) -> jax.Array:
     """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with H = KV * G.
     Returns (B, Sq, H, D).  ``q_offset`` is the absolute position of q[0]
-    (used when queries are a sequence-parallel shard)."""
+    (used when queries are a sequence-parallel shard).
+
+    ``positions`` — optional (B, Sq) per-row absolute token positions used
+    for BOTH queries and keys (self-attention over one token stream; requires
+    Skv == Sq and q_offset == 0).  Entries < 0 mark padding: such keys are
+    masked everywhere and such query rows produce garbage the caller
+    discards.  Contract: valid entries per row must form a contiguous
+    shifted arange (left-padded bucketed prefill), which keeps the kernel's
+    index-space block skipping exact.  ``None`` keeps the classic broadcast
+    arange and is bit-identical to the pre-positional kernel."""
     B, Sq, H, D = q.shape
     Skv, KV = k.shape[1], k.shape[2]
     G = H // KV
+    if positions is None:
+        qp = jnp.broadcast_to(
+            jnp.arange(Sq, dtype=jnp.int32) + q_offset, (B, Sq))
+        kp = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+    else:
+        if positions.shape != (B, Sq):
+            raise ValueError(
+                f"positions must be (B, Sq)=({B}, {Sq}); "
+                f"got {positions.shape}")
+        if Skv != Sq:
+            raise ValueError(
+                "per-row positions require self-attention shapes "
+                f"(Skv == Sq); got Sq={Sq}, Skv={Skv}")
+        if q_offset:
+            raise ValueError("positions and q_offset are mutually exclusive "
+                             "(positions are absolute)")
+        qp = kp = positions.astype(jnp.int32)
     bq, bk = tile
     bq = min(bq, _rup(Sq, 8))
     bk = min(bk, _rup(Skv, 128))
@@ -95,12 +136,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qt = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
     kt = jnp.pad(k, ((0, 0), (0, Skp - Skv), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
     vt = jnp.pad(v, ((0, 0), (0, Skp - Skv), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    # pad positions with -1: the padded tail is masked positionally (the
+    # pre-positional kernel's kv_len test, folded into the arrays)
+    qpp = jnp.pad(qp, ((0, 0), (0, Sqp - Sq)), constant_values=-1)
+    kpp = jnp.pad(kp, ((0, 0), (0, Skp - Skv)), constant_values=-1)
     nq, nk = Sqp // bq, Skp // bk
     grid = (B, H, nq, nk)
 
     kern = functools.partial(
         _kernel, nk=nk, bq=bq, bk=bk, causal=causal, window=window,
-        softcap=softcap, scale=D ** -0.5, kv_len=Skv, q_offset=q_offset)
+        softcap=softcap, scale=D ** -0.5, q_offset=q_offset)
     out = pl.pallas_call(
         kern, grid=grid,
         in_specs=[
@@ -109,13 +154,15 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          lambda b, h, i, kb, G=G: (b, h // G, kb, 0)),
             pl.BlockSpec((1, 1, bk, D),
                          lambda b, h, i, kb, G=G: (b, h // G, kb, 0)),
+            pl.BlockSpec((1, bq), lambda b, h, i, kb: (b, i)),
+            pl.BlockSpec((1, bk), lambda b, h, i, kb: (b, kb)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, kb: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, Sqp, D), q.dtype),
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, D), jnp.float32)],
-        interpret=interpret)(qt, kt, vt)
+        interpret=interpret)(qt, kt, vt, qpp, kpp)
     return out.transpose(0, 2, 1, 3)[:, :Sq]
 
 

@@ -107,11 +107,10 @@ def _rup(n, m):
 # KV-pool lookup path)
 # ---------------------------------------------------------------------------
 
-def _paged_kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+def _paged_kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, qp_ref, o_ref,
                   m_ref, l_ref, acc_ref, *, bs: int, nblk: int,
                   window: Optional[int], softcap: Optional[float],
                   scale: float):
-    b = pl.program_id(0)
     jb = pl.program_id(2)
 
     @pl.when(jb == 0)
@@ -120,20 +119,22 @@ def _paged_kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, d)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (Sq*G, d)
     k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, d)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G, bs)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (Sq*G, bs)
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
     # block j of the table holds token positions [j*bs, (j+1)*bs); the pool
     # block it maps to was selected by the BlockSpec index_map (scalar
-    # prefetch), so masking is purely positional
+    # prefetch), so masking is purely positional.  Query positions arrive
+    # pre-expanded to one row per (chunk token, group) pair; rows < 0 are
+    # padding (fully masked → zero output, discarded by the caller).
     kpos = jb * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
-    qpos = lens_ref[b]
-    valid = kpos <= qpos
+    qrow = qp_ref[0][:, None]                            # (Sq*G, 1)
+    valid = (qrow >= 0) & (kpos[None, :] <= qrow)
     if window:
-        valid &= kpos > qpos - window
-    s = jnp.where(valid[None, :], s, NEG)
+        valid &= kpos[None, :] > qrow - window
+    s = jnp.where(valid, s, NEG)
     m_prev = m_ref[...]
     m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
     p = jnp.exp(s - m_cur)
@@ -187,47 +188,65 @@ def copy_block(pool: jax.Array, src, dst, *,
 
 def paged_decode_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
                            bt: jax.Array, lens: jax.Array, *,
+                           qpos: Optional[jax.Array] = None,
                            window: Optional[int] = None,
                            softcap: Optional[float] = None,
                            interpret: bool = False) -> jax.Array:
-    """Decode attention over a paged KV pool.
+    """Decode / chunked catch-up attention over a paged KV pool.
 
-    q: (B, 1, H, D); kp/vp: (NB, bs, KV, D) device-resident block pools;
+    q: (B, Sq, H, D); kp/vp: (NB, bs, KV, D) device-resident block pools;
     bt: (B, nblk) int32 block table (pool block id per logical block);
     lens: (B,) int32 current decode position per row (token ``lens[b]`` has
-    just been written at logical offset ``lens[b]``).  Returns (B, 1, H, D).
+    just been written at logical offset ``lens[b]``).  Returns (B, Sq, H, D).
+
+    ``qpos`` — optional (B, Sq) int32 absolute positions of the query
+    tokens, required when Sq > 1 (chunked prefill catch-up: row b scores a
+    whole chunk of ``Sq = k`` freshly written tokens against its pool
+    blocks in one pass).  Entries < 0 mark padding rows whose output is
+    zero and discarded.  Defaults to ``lens[:, None]`` — the classic
+    single-token decode, bit-identical to the pre-chunk kernel.
 
     Block tables and lengths ride the scalar-prefetch channel
     (:class:`pltpu.PrefetchScalarGridSpec`): the BlockSpec ``index_map``
     reads ``bt[b, j]`` to aim each grid step's DMA at the right pool block —
     the gather never materializes a contiguous per-request cache.
     """
-    B, _, H, D = q.shape
+    B, Sq, H, D = q.shape
     bs, KV = kp.shape[1], kp.shape[2]
     nblk = bt.shape[1]
     G = H // KV
-    qt = q.reshape(B, KV, G, D)
+    if qpos is None:
+        qpos = lens.reshape(B, 1).astype(jnp.int32)
+    # rows ordered (chunk token, group): row r ↔ token r // G, group r % G
+    qt = (q.reshape(B, Sq, KV, G, D).transpose(0, 2, 1, 3, 4)
+          .reshape(B, KV, Sq * G, D))
+    # expand positions to one entry per kernel row (host-side repeat keeps
+    # the kernel body free of gathers/reshapes Mosaic dislikes)
+    qpe = jnp.repeat(qpos.astype(jnp.int32), G, axis=1)   # (B, Sq*G)
     kern = functools.partial(_paged_kernel, bs=bs, nblk=nblk, window=window,
                              softcap=softcap, scale=D ** -0.5)
+    R = Sq * G
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, nblk),
         in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, R, D), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, D),
                          lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
             pl.BlockSpec((1, bs, 1, D),
                          lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, R), lambda b, h, j, tbl, ln: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D),
+        out_specs=pl.BlockSpec((1, 1, R, D),
                                lambda b, h, j, tbl, ln: (b, h, 0, 0)),
-        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
-                        pltpu.VMEM((G, 1), jnp.float32),
-                        pltpu.VMEM((G, D), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((R, 1), jnp.float32),
+                        pltpu.VMEM((R, 1), jnp.float32),
+                        pltpu.VMEM((R, D), jnp.float32)],
     )
     out = pl.pallas_call(
         kern, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, KV, R, D), q.dtype),
         interpret=interpret)(
-        bt.astype(jnp.int32), lens.astype(jnp.int32), qt, kp, vp)
-    return out.reshape(B, 1, H, D)
+        bt.astype(jnp.int32), lens.astype(jnp.int32), qt, kp, vp, qpe)
+    return (out.reshape(B, KV, Sq, G, D).transpose(0, 2, 1, 3, 4)
+            .reshape(B, Sq, H, D))

@@ -28,8 +28,9 @@ def matmul_fused(x, w, *, bias=None, w2=None, act=None, tile=None,
 def flash_attention(q, k, v, positions=None, *, causal=True, window=None,
                     softcap=None, tile=None, q_offset=0, interpret=False):
     return _fa.flash_attention(
-        q, k, v, causal=causal, window=window, softcap=softcap,
-        tile=tile or (256, 512), q_offset=q_offset, interpret=interpret)
+        q, k, v, positions=positions, causal=causal, window=window,
+        softcap=softcap, tile=tile or (256, 512), q_offset=q_offset,
+        interpret=interpret)
 
 
 def decode_attention(q, kc, vc, pos, qpos, *, window=None, softcap=None,
@@ -39,12 +40,14 @@ def decode_attention(q, kc, vc, pos, qpos, *, window=None, softcap=None,
         block_k=tile or 2048, interpret=interpret)
 
 
-def paged_decode_attention(q, kp, vp, bt, lens, *, window=None, softcap=None,
-                           tile=None, interpret=False):
+def paged_decode_attention(q, kp, vp, bt, lens, *, qpos=None, window=None,
+                           softcap=None, tile=None, interpret=False):
     # the paged path has no free tile knob: the physical pool block is the
-    # kernel's KV block (tile accepted for wrapper uniformity)
-    return _da.paged_decode_attention(q, kp, vp, bt, lens, window=window,
-                                      softcap=softcap, interpret=interpret)
+    # kernel's KV block (tile accepted for wrapper uniformity).  qpos (B, Sq)
+    # unlocks the chunked catch-up mode (Sq = k > 1).
+    return _da.paged_decode_attention(q, kp, vp, bt, lens, qpos=qpos,
+                                      window=window, softcap=softcap,
+                                      interpret=interpret)
 
 
 def copy_block(pool, src, dst, *, interpret=False):

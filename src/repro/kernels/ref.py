@@ -25,8 +25,8 @@ def matmul_fused_ref(x, w, *, bias=None, w2=None, act=None, out_dtype=None):
     return y.astype(out_dtype or x.dtype)
 
 
-def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
-                        q_offset=0):
+def flash_attention_ref(q, k, v, *, positions=None, causal=True, window=None,
+                        softcap=None, q_offset=0):
     B, Sq, H, D = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -35,14 +35,28 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
-    qpos = jnp.arange(Sq)[:, None] + q_offset
-    kpos = jnp.arange(k.shape[1])[None, :]
-    valid = jnp.ones((Sq, k.shape[1]), bool)
-    if causal:
-        valid &= kpos <= qpos
-    if window:
-        valid &= kpos > qpos - window
-    s = jnp.where(valid[None, None, None], s, -1e30)
+    if positions is None:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(k.shape[1])[None, :]
+        valid = jnp.ones((Sq, k.shape[1]), bool)
+        if causal:
+            valid &= kpos <= qpos
+        if window:
+            valid &= kpos > qpos - window
+        mask = valid[None, None, None]                   # (1,1,1,Sq,Skv)
+    else:
+        # per-row positions (left-padded rows): pad keys (< 0) are masked
+        # everywhere; pad query rows yield garbage the caller discards
+        pos = positions.astype(jnp.int32)
+        qpos = pos[:, :, None]                           # (B, Sq, 1)
+        kpos = pos[:, None, :]                           # (B, 1, Skv)
+        valid = kpos >= 0
+        if causal:
+            valid &= kpos <= qpos
+        if window:
+            valid &= kpos > qpos - window
+        mask = valid[:, None, None]                      # (B,1,1,Sq,Skv)
+    s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
     return o.reshape(B, Sq, H, D).astype(q.dtype)
@@ -65,7 +79,7 @@ def decode_attention_ref(q, kc, vc, pos, qpos, *, window=None, softcap=None):
     return o.reshape(B, 1, H, D).astype(q.dtype)
 
 
-def paged_decode_attention_ref(q, kp, vp, bt, lens, *, window=None,
+def paged_decode_attention_ref(q, kp, vp, bt, lens, *, qpos=None, window=None,
                                softcap=None, compute_dtype=None):
     """Reference paged-KV decode attention (the registry's ``ref`` fallback).
 
@@ -73,8 +87,13 @@ def paged_decode_attention_ref(q, kp, vp, bt, lens, *, window=None,
     (B, nblk*bs, KV, D) view, then mirrors :func:`repro.core.ops_impl._sdpa`'s
     decode math operation-for-operation so the paged path is *byte-identical*
     to the rolling-cache reference path when the gathered length matches.
+
+    ``qpos`` (B, Sq) absolute query positions unlocks the chunked catch-up
+    mode (Sq > 1); rows < 0 are padding (masked everywhere, output garbage
+    the caller discards).  Defaults to ``lens[:, None]`` — the classic
+    single-token decode, byte-identical to the pre-chunk reference.
     """
-    B, _, H, D = q.shape
+    B, Sq, H, D = q.shape
     bs, KV = kp.shape[1], kp.shape[2]
     nblk = bt.shape[1]
     G = H // KV
@@ -83,17 +102,21 @@ def paged_decode_attention_ref(q, kp, vp, bt, lens, *, window=None,
     kc = kp[bt].reshape(B, C, KV, D)          # gather over the block table
     vc = vp[bt].reshape(B, C, KV, D)
     kpos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
-    qpos = lens.reshape(B, 1).astype(jnp.int32)
+    if qpos is None:
+        qpos = lens.reshape(B, 1).astype(jnp.int32)
+    else:
+        qpos = qpos.astype(jnp.int32)
     scale = D ** -0.5
     qf = (q * scale).astype(dt)
     kf = kc.astype(dt)
     vf = vc.astype(dt)
-    qg = qf.reshape(B, 1, KV, G, D)
+    qg = qf.reshape(B, Sq, KV, G, D)
     s = jnp.einsum("bckgd,bskd->bkgcs", qg, kf,
                    preferred_element_type=jnp.float32)
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
     valid = kpos[:, None, None, None, :] >= 0
+    valid &= qpos[:, None, None, :, None] >= 0
     valid &= kpos[:, None, None, None, :] <= qpos[:, None, None, :, None]
     if window:
         valid &= kpos[:, None, None, None, :] > (
@@ -102,7 +125,7 @@ def paged_decode_attention_ref(q, kp, vp, bt, lens, *, window=None,
     pr = jax.nn.softmax(s, axis=-1).astype(dt)
     o = jnp.einsum("bkgcs,bskd->bckgd", pr, vf,
                    preferred_element_type=jnp.float32)
-    return o.reshape(B, 1, H, D).astype(dt)
+    return o.reshape(B, Sq, H, D).astype(dt)
 
 
 def copy_block_ref(pool, src, dst):

@@ -37,7 +37,10 @@ def _run_replay(args) -> None:
                         max_batch=args.max_batch,
                         max_seq_len=args.max_seq_len,
                         block_size=args.block_size,
-                        prefix_cache=bool(args.prefix_cache))
+                        prefix_cache=bool(args.prefix_cache),
+                        chunk_size=args.chunk_size,
+                        chunked_prefill=args.chunked_prefill,
+                        fori_seg=args.fori_seg)
     if args.serving_autotune:
         from repro.serving.autotune import ServingProfile, autotune_decode
         prof = ServingProfile(name="cli",
@@ -53,7 +56,11 @@ def _run_replay(args) -> None:
             # explicit --prefix-cache / --no-prefix-cache overrides the
             # tuned pick; unset defers to the measured A/B
             prefix_cache=at.prefix_cache if args.prefix_cache is None
-            else args.prefix_cache)
+            else args.prefix_cache,
+            # explicit CLI chunk/fori knobs likewise override the tuned ones
+            **({"chunk_size": args.chunk_size,
+                "chunked_prefill": True} if args.chunked_prefill else {}),
+            **({"fori_seg": args.fori_seg} if args.fori_seg else {}))
     else:
         shape = ShapeConfig("serve", "decode", args.max_seq_len,
                             args.max_batch)
@@ -113,6 +120,18 @@ def main():
                          "mode); the replay report includes the hit rate. "
                          "Unset + --serving-autotune defers to the measured "
                          "A/B; --no-prefix-cache forces it off")
+    ap.add_argument("--chunk-size", type=int, default=1,
+                    help="catch-up chunk width k: prompt tails advance up "
+                         "to k tokens per decode tick through the (B, k) "
+                         "paged cell (replay mode)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="admit cold prompts without a batched prefill and "
+                         "drain them k tokens per tick (vLLM-style chunked "
+                         "prefill; replay mode)")
+    ap.add_argument("--fori-seg", type=int, default=0,
+                    help="host-free decode: run this many steady-state "
+                         "decode ticks as one on-device fori_loop segment "
+                         "(0 = per-tick host loop; replay mode)")
     ap.add_argument("--serving-autotune", action="store_true",
                     help="search the decode-cell flow space per batch "
                          "bucket and pin the winner before replay")

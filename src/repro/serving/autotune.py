@@ -42,11 +42,17 @@ class ServingProfile:
     batch_buckets: Tuple[int, ...] = (1, 4, 16)
     max_seq_len: int = 256
     block_sizes: Tuple[int, ...] = (8, 16, 32)
+    # chunked-prefill catch-up widths to microbench (k of the (B, k) cell)
+    chunk_sizes: Tuple[int, ...] = (1, 2, 4)
+    # host-free decode segment lengths to A/B (0 = per-tick host loop)
+    fori_segs: Tuple[int, ...] = (0, 4, 8)
 
     def __post_init__(self):
         # frozen dataclass: normalize sequence inputs via object.__setattr__
         object.__setattr__(self, "batch_buckets", tuple(self.batch_buckets))
         object.__setattr__(self, "block_sizes", tuple(self.block_sizes))
+        object.__setattr__(self, "chunk_sizes", tuple(self.chunk_sizes))
+        object.__setattr__(self, "fori_segs", tuple(self.fori_segs))
         if not self.batch_buckets or \
                 tuple(sorted(self.batch_buckets)) != self.batch_buckets:
             raise ValueError("batch_buckets must be ascending and non-empty")
@@ -61,6 +67,15 @@ class ServingProfile:
                 "every candidate block size must divide max_seq_len "
                 "(EngineConfig requires whole-block prompt buckets); got "
                 f"{self.block_sizes} vs max_seq_len={self.max_seq_len}")
+        if not self.chunk_sizes or \
+                any(k < 1 or k > self.max_seq_len for k in self.chunk_sizes):
+            raise ValueError(
+                f"chunk sizes must be in [1, max_seq_len]; got "
+                f"{self.chunk_sizes}")
+        if any(s == 1 or s < 0 for s in self.fori_segs):
+            raise ValueError(
+                f"fori segment candidates must be 0 (off) or >= 2; got "
+                f"{self.fori_segs}")
 
     def shape_for(self, bucket: int) -> ShapeConfig:
         return ShapeConfig(f"{self.name}_decode{self.max_seq_len}_b{bucket}",
@@ -80,6 +95,10 @@ class DecodeAutotune:
     mesh: Any = None
     prefix_cache: bool = False
     prefix_times_s: Dict[str, float] = field(default_factory=dict)
+    chunk_size: int = 1
+    chunk_times_us: Dict[int, float] = field(default_factory=dict)
+    fori_seg: int = 0
+    fori_times_s: Dict[str, float] = field(default_factory=dict)
 
     def _measured_per_token(self, bucket: int) -> Optional[float]:
         er = self.per_bucket[bucket]
@@ -126,7 +145,10 @@ class DecodeAutotune:
             max_seq_len=self.profile.max_seq_len,
             batch_buckets=tuple(self.profile.batch_buckets),
             block_size=self.block_size,
-            prefix_cache=self.prefix_cache)
+            prefix_cache=self.prefix_cache,
+            chunk_size=self.chunk_size,
+            chunked_prefill=self.chunk_size > 1,
+            fori_seg=self.fori_seg)
         kw.update(overrides)
         return EngineConfig(**kw)
 
@@ -143,7 +165,8 @@ class DecodeAutotune:
         lines = [f"serving-autotune[{self.cfg.name} x {self.profile.name}] "
                  f"buckets={list(self.profile.batch_buckets)} "
                  f"pin=b{self.best_bucket} block_size={self.block_size} "
-                 f"prefix_cache={'on' if self.prefix_cache else 'off'}"]
+                 f"prefix_cache={'on' if self.prefix_cache else 'off'} "
+                 f"chunk={self.chunk_size} fori_seg={self.fori_seg or 'off'}"]
         for b in self.profile.batch_buckets:
             er = self.per_bucket[b]
             t = self._measured_per_token(b)
@@ -156,6 +179,13 @@ class DecodeAutotune:
         if self.prefix_times_s:
             lines.append("  prefix_replay_s: " + " ".join(
                 f"{k}:{v:.3f}" for k, v in sorted(self.prefix_times_s.items())))
+        if self.chunk_times_us:
+            lines.append("  chunk_us_per_tok: " + " ".join(
+                f"k{k}:{v:.0f}" for k, v in sorted(self.chunk_times_us.items())))
+        if self.fori_times_s:
+            lines.append("  fori_replay_s: " + " ".join(
+                f"{k}:{v:.3f}" for k, v in sorted(
+                    self.fori_times_s.items(), key=lambda kv: int(kv[0]))))
         return "\n".join(lines)
 
 
@@ -201,6 +231,101 @@ def tune_block_size(cfg: ModelConfig, profile: ServingProfile, *,
             ts.append(time.perf_counter() - t0)
         times[bs] = float(np.median(ts) * 1e6)
     best = min(sorted(times, reverse=True), key=lambda b: times[b])
+    return best, times
+
+
+def tune_chunk_size(cfg: ModelConfig, profile: ServingProfile, *,
+                    block_size: Optional[int] = None,
+                    iters: int = 5, seed: int = 0
+                    ) -> Tuple[int, Dict[int, float]]:
+    """Microbenchmark the chunked catch-up cell — a (B, k) multi-query
+    lookup against the paged pool — per candidate chunk width ``k`` and
+    pick the best measured *per-token* time (ties -> the larger chunk:
+    fewer engine ticks, hence fewer host syncs, per caught-up prompt).
+    Mirrors :func:`tune_block_size`; uses the registry-resolved backend."""
+    from repro.kernels.registry import REGISTRY
+    att = cfg.attention
+    if att is None:
+        raise ValueError(f"{cfg.name} has no attention; nothing to tune")
+    B = profile.batch_buckets[-1]
+    H, KV, D = att.n_heads, att.n_kv_heads, att.head_dim
+    bs = block_size if block_size is not None else profile.block_sizes[0]
+    rng = np.random.RandomState(seed)
+    from repro.serving.kvcache import blocks_for_tokens
+    nblk = blocks_for_tokens(profile.max_seq_len, bs)
+    NB = 1 + B * nblk
+    kp = jnp.asarray(rng.randn(NB, bs, KV, D), jnp.float32)
+    vp = jnp.asarray(rng.randn(NB, bs, KV, D), jnp.float32)
+    bt = jnp.asarray(
+        1 + (np.arange(B * nblk) % (NB - 1)).reshape(B, nblk), jnp.int32)
+    use_pallas = REGISTRY.resolve("paged_decode_attention") == "pallas"
+    fn = REGISTRY.get("paged_decode_attention",
+                      "pallas" if use_pallas else "ref").fn
+    times: Dict[int, float] = {}
+    for k in profile.chunk_sizes:
+        resident = max(profile.max_seq_len - k, 0)
+        q = jnp.asarray(rng.randn(B, k, H, D), jnp.float32)
+        lens = jnp.full((B,), resident, jnp.int32)
+        qpos = lens[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+        if use_pallas:
+            run = jax.jit(lambda q, kp, vp, bt, ln, qp:
+                          fn(q, kp, vp, bt, ln, qpos=qp))
+        else:
+            run = jax.jit(lambda q, kp, vp, bt, ln, qp:
+                          fn(q, kp, vp, bt, ln, qpos=qp,
+                             compute_dtype=jnp.float32))
+        jax.block_until_ready(run(q, kp, vp, bt, lens, qpos))
+        ts = []
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(q, kp, vp, bt, lens, qpos))
+            ts.append(time.perf_counter() - t0)
+        times[k] = float(np.median(ts) * 1e6 / k)      # per catch-up token
+    best = min(sorted(times, reverse=True), key=lambda k: times[k])
+    return best, times
+
+
+def tune_fori_seg(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
+                  ) -> Tuple[int, Dict[str, float]]:
+    """Measured A/B of the host-free decode segment length on a
+    decode-heavy replay of the profile's envelope: serve the same request
+    batch through a pinned Engine once per candidate ``fori_seg`` (0 = the
+    per-tick host loop) and keep the fastest.  Ties break toward the
+    *larger* segment — equal wall time with fewer host syncs per token is
+    still a latency-variance win.  Mirrors :func:`tune_prefix_cache`."""
+    from repro.serving.engine import Engine
+    from repro.serving.scheduler import synthetic_requests
+    prof = at.profile
+    bs = at.block_size
+    cands = sorted({0, *prof.fori_segs})
+    segs = [s for s in cands if s] or [0]
+    # short prompts (one block, bucket-exact: no left-padding) and long
+    # generations — the segment loop's home turf
+    prompt_len = bs
+    max_new = min(prof.max_seq_len - prompt_len,
+                  max(8, 2 * max(segs)))
+    if max_new < 2:
+        return 0, {}                   # envelope too small for any segment
+    cands = [s for s in cands if s <= max_new]
+    n = max(4, 2 * prof.batch_buckets[-1])
+    cm = at.compile()
+    params = cm.init_params(jax.random.key(seed))
+    reqs = synthetic_requests(n, at.cfg.vocab_size, prompt_len=prompt_len,
+                              max_new_tokens=max_new, seed=seed,
+                              vary_lens=False)
+    buckets = tuple(sorted({prompt_len, prof.max_seq_len}))
+    times: Dict[str, float] = {}
+    for seg in cands:
+        eng = Engine(cm, params,
+                     at.engine_config(fori_seg=seg, prompt_buckets=buckets))
+        eng.run(reqs)                         # warm the tick programs
+        ts = []
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            ts.append(time.perf_counter() - t0)
+        times[str(seg)] = float(np.median(ts))
+    best = min(sorted(cands, reverse=True), key=lambda s: times[str(s)])
     return best, times
 
 
@@ -263,6 +388,8 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
                     smoke: bool = False,
                     tune_blocks: bool = True,
                     tune_prefix: Optional[bool] = None,
+                    tune_chunks: bool = True,
+                    tune_fori: Optional[bool] = None,
                     use_cache: bool = True) -> DecodeAutotune:
     """Search the flow design space for each decode cell of the serving
     profile and return the pinnable result.
@@ -275,7 +402,12 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
     factorization part of the search (or pins it, exactly as in
     ``repro.flow.compile``).  ``tune_prefix`` A/Bs the prefix-cache toggle
     on a measured shared-prefix replay (default: only under
-    ``validate="measure"`` — it wall-clocks real engine runs)."""
+    ``validate="measure"`` — it wall-clocks real engine runs).
+    ``tune_chunks`` microbenchmarks the chunked-prefill catch-up width
+    ``k`` (adopted only when the model's per-request state is fully paged —
+    the Engine's own gate); ``tune_fori`` A/Bs the host-free decode segment
+    length on a decode-heavy replay (default: only under
+    ``validate="measure"``, like ``tune_prefix``)."""
     from repro.flow import _resolve_cfg
     if validate not in ("measure", "compile", "none"):
         raise ValueError(f"unknown validate mode {validate!r}")
@@ -317,4 +449,18 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
     if do_prefix:
         at.prefix_cache, at.prefix_times_s = tune_prefix_cache(at,
                                                                iters=iters)
+    if tune_chunks and cfg.attention is not None:
+        chunk, chunk_times = tune_chunk_size(cfg, profile,
+                                             block_size=at.block_size,
+                                             iters=iters)
+        at.chunk_times_us = chunk_times
+        if chunk > 1:
+            # the Engine's chunked paths require fully paged per-request
+            # state (recurrent entries can't replay a chunk); honor its gate
+            from repro.serving.kvcache import _state_entries
+            if all(e.paged for e in _state_entries(at.compile().plan)):
+                at.chunk_size = chunk
+    do_fori = tune_fori if tune_fori is not None else validate == "measure"
+    if do_fori:
+        at.fori_seg, at.fori_times_s = tune_fori_seg(at, iters=iters)
     return at

@@ -18,10 +18,24 @@ sampling).  On top of it the Engine adds the production loop:
 
 Bucketed prefill left-pads prompts and threads explicit per-row positions
 through the model (``batch["positions"]``); padded rows carry negative
-positions, which the reference attention path masks out.  The TPU flash
-kernel's mask is iota-based, so exact bucketed prefill currently requires
-the reference attention path (decode, where serving spends its time, is
-position-driven on both paths).
+positions, which both attention paths mask out (the Pallas flash kernel's
+mask is positional too, so bucketed prefill is exact on either backend;
+decode is position-driven everywhere).
+
+Two perf paths sit on top of the basic tick loop, both gated to stay
+byte-identical to it:
+
+* **chunked prefill** (``chunk_size`` / ``chunked_prefill``) — slots
+  catching up on a prompt tail (prefix-cache hits, and with
+  ``chunked_prefill`` every cold prompt) advance ``chunk_size`` tokens per
+  tick through a ``(B, k)`` catch-up cell, interleaved with ongoing decodes
+  in the same tick, instead of stalling the batch one token at a time;
+* **host-free decode segments** (``fori_seg``) — steady-state stretches
+  with no scheduling events (no admissions pending in a slot, no tail
+  catch-up, every slot at least ``fori_seg`` tokens from its budget) run as
+  one on-device ``fori_loop`` with in-loop sampling: one host round-trip
+  per segment instead of per token.  The loop falls back to per-tick host
+  stepping whenever admit/evict/COW/finish bookkeeping needs the host.
 """
 from __future__ import annotations
 
@@ -73,6 +87,18 @@ class EngineConfig:
     # batched prefill for a long sequential tail
     prefix_cache: bool = False
     prefix_cache_min_ratio: float = 0.5
+    # chunked prefill: slots catching up on a prompt tail advance
+    # chunk_size tokens per decode tick through a (B, k) cell; with
+    # chunked_prefill on, cold prompts skip the monolithic prefill batch
+    # entirely and drain the same way (vLLM-style).  chunk_buckets is the
+    # per-tick chunk ladder (rung 1 = plain decode tick).
+    chunk_size: int = 1
+    chunked_prefill: bool = False
+    chunk_buckets: Optional[Tuple[int, ...]] = None
+    # host-free decode: run fori_seg decode ticks as one on-device
+    # fori_loop (sampling in-loop) when no scheduling event can occur
+    # within the segment; 0 disables
+    fori_seg: int = 0
     # debugging/parity: keep the sampled-step logits on each RequestResult
     capture_logits: bool = False
 
@@ -88,6 +114,29 @@ class EngineConfig:
             raise ValueError("temperature must be >= 0")
         if not 0.0 <= self.prefix_cache_min_ratio <= 1.0:
             raise ValueError("prefix_cache_min_ratio must be in [0, 1]")
+        if not 1 <= self.chunk_size <= self.max_seq_len:
+            raise ValueError(
+                f"chunk_size must be in [1, max_seq_len="
+                f"{self.max_seq_len}], got {self.chunk_size}")
+        if self.fori_seg == 1 or self.fori_seg < 0:
+            raise ValueError(
+                f"fori_seg must be 0 (off) or >= 2, got {self.fori_seg}")
+        if self.chunk_buckets is None:
+            self.chunk_buckets = (1,) if self.chunk_size == 1 \
+                else (1, self.chunk_size)
+        else:
+            self.chunk_buckets = tuple(sorted(set(
+                int(b) for b in self.chunk_buckets)))
+            if any(b < 1 for b in self.chunk_buckets):
+                raise ValueError("chunk buckets must be positive")
+            if self.chunk_buckets[0] != 1:
+                raise ValueError(
+                    "chunk_buckets must include rung 1 (plain decode "
+                    f"ticks), got {self.chunk_buckets}")
+            if self.chunk_buckets[-1] != self.chunk_size:
+                raise ValueError(
+                    f"chunk_buckets must end at chunk_size="
+                    f"{self.chunk_size}, got {self.chunk_buckets}")
         if self.batch_buckets is None:
             self.batch_buckets = _pow2_ladder(1, self.max_batch)
         else:
@@ -147,11 +196,14 @@ class RunReport:
             f"({m['tokens_per_s']:.1f} tok/s)\n"
             f"  latency: p50={m['p50_latency_s'] * 1e3:.1f}ms "
             f"p95={m['p95_latency_s'] * 1e3:.1f}ms "
-            f"ttft_p50={m['p50_ttft_s'] * 1e3:.1f}ms\n"
+            f"ttft_p50={m['p50_ttft_s'] * 1e3:.1f}ms "
+            f"ttft_p95={m['p95_ttft_s'] * 1e3:.1f}ms\n"
             f"  loop: ticks={m['decode_ticks']} "
             f"prefill_batches={m['prefill_batches']} "
             f"admissions={m['admissions']} evictions={m['evictions']} "
-            f"refills={m['refills']}\n"
+            f"refills={m['refills']} "
+            f"fori_segments={m['fori_segments']} "
+            f"host_syncs/tok={m['host_syncs_per_token']:.3f}\n"
             f"  kv-pool: {m['pool_blocks']} blocks x {m['block_size']} tok, "
             f"peak_used={m['peak_used_blocks']} "
             f"peak_live_tokens={m['peak_live_tokens']}")
@@ -224,25 +276,34 @@ class Engine:
         cache = self.new_cache()
         sched = Scheduler(e.max_batch, e.block_size, cache.pool,
                           max_seq_len=e.max_seq_len,
-                          prefix=cache if e.prefix_cache else None)
+                          prefix=cache if e.prefix_cache else None,
+                          chunk_prefill=e.chunked_prefill)
         for r in requests:
             sched.submit(r)
         # Left-padded (bucketed) prefill is only exact when every
-        # cross-position op masks by the positions array: the Pallas flash
-        # kernel masks by iota instead, and recurrent/conv temporal-mixing
-        # ops never see positions at all — both would consume the pad tokens
-        # as real context.  Enforce exact prompt buckets there rather than
-        # silently corrupt.
-        has_recurrence = any(not e.paged and e.op.op != "attention"
-                             for e in cache._entries)
-        pad_unsafe = has_recurrence or self.plan.kernels.get("attention") in (
-            "pallas", "pallas_interpret")
+        # cross-position op masks by the positions array: recurrent/conv
+        # temporal-mixing ops never see positions at all and would consume
+        # the pad tokens as real context.  Enforce exact prompt buckets
+        # there rather than silently corrupt.  (Both attention backends
+        # mask positionally — the flash kernel included — so attention-only
+        # models pad safely on any backend.)
+        has_recurrence = any(not en.paged and en.op.op != "attention"
+                             for en in cache._entries)
+        pad_unsafe = has_recurrence
+        if (e.chunk_size > 1 or e.chunked_prefill) and \
+                any(not en.paged for en in cache._entries):
+            raise ValueError(
+                f"{self.plan.cfg.name}: chunked prefill (chunk_size > 1 or "
+                "chunked_prefill) needs every per-request state entry to be "
+                "paged self-attention; recurrent or cross-attention state "
+                "can only advance one token per tick")
 
         rng = jax.random.key(e.seed)
         t0 = time.perf_counter()
         ticks = prefill_batches = 0
         peak_used = peak_live = 0
         prefill_tokens = catchup_tokens = prompt_tokens_total = 0
+        host_syncs = fori_segments = 0
 
         def evict_finished():
             for sidx in sched.finished():
@@ -260,7 +321,10 @@ class Engine:
                 if a.covered:
                     cache.admit_cached(a.slot, a.request.prompt,
                                        a.reserve_tokens, a.match)
-            adm = [a for a in admitted if not a.covered]
+                elif a.chunked:
+                    cache.admit_tail(a.slot, a.request.prompt,
+                                     a.reserve_tokens)
+            adm = [a for a in admitted if not a.covered and not a.chunked]
             if not admitted and not sched.active_slots:
                 # nothing running and the queue head still can't be admitted:
                 # its block budget exceeds the whole pool — fail loudly
@@ -285,20 +349,13 @@ class Engine:
                 for i, a in enumerate(adm):
                     pad = Sp - a.request.prompt_len
                     if pad and pad_unsafe:
-                        why = ("the model has recurrent temporal-mixing "
-                               "state that consumes pad tokens unmasked"
-                               if has_recurrence else
-                               "the compiled attention backend "
-                               f"({self.plan.kernels.get('attention')}) "
-                               "masks by position index and would attend "
-                               "the padding")
                         raise ValueError(
                             f"request {a.request.rid!r}: prompt length "
                             f"{a.request.prompt_len} needs left-padding to "
-                            f"bucket {Sp}, but {why}; use exact "
-                            "prompt_buckets matching the prompt lengths"
-                            + ("" if has_recurrence else
-                               " or compile with backend='reference'"))
+                            f"bucket {Sp}, but the model has recurrent "
+                            "temporal-mixing state that consumes pad tokens "
+                            "unmasked; use exact prompt_buckets matching "
+                            "the prompt lengths")
                     tokens[i, pad:] = a.request.prompt
                     positions[i] = np.arange(Sp, dtype=np.int32) - pad
                 logits, pstate, _ = self.compiled.prefill(
@@ -307,6 +364,7 @@ class Engine:
                 rng, k = jax.random.split(rng)
                 toks = np.asarray(
                     self._sample(logits[:, -1], k, e.temperature))
+                host_syncs += 1
                 for i, a in enumerate(adm):
                     cache.admit(a.slot, a.request.prompt_len,
                                 a.reserve_tokens, pstate, i,
@@ -322,55 +380,139 @@ class Engine:
                 peak_live = max(peak_live, cache.live_tokens())
                 evict_finished()
 
-            # 2. one decode tick over the occupied slots (batch-bucketed).
-            #    Slots still catching up on an uncovered prompt tail feed
-            #    their next prompt token instead of the last sample — the
-            #    tick is simultaneously decode (for caught-up slots) and
-            #    mid-sequence prefill (for seeded ones).
+            # 2. advance the occupied slots (batch-bucketed): a host-free
+            #    fori segment when nothing can interrupt it, otherwise one
+            #    (possibly chunked) decode tick.
             active = sched.active_slots
-            if active:
-                B = bucket_for(sched.high_water, e.batch_buckets)
+            if not active:
+                continue
+            B = bucket_for(sched.high_water, e.batch_buckets)
+
+            # 2a. host-free segment: when no scheduling event can occur for
+            #     the next fori_seg ticks — no slot is catching up, and every
+            #     slot has at least fori_seg tokens of budget left — run the
+            #     whole stretch as one on-device fori_loop with in-loop
+            #     sampling.  COW safety: refcounts only change at admission
+            #     and eviction, neither of which can happen mid-segment, so
+            #     a fork can never *become* needed after prepare_decode; and
+            #     rem >= fori_seg keeps every row inside its reserved chain
+            #     (a stop-token slot keeps ticking on device — its post-stop
+            #     tokens are dropped here and the slot evicted right after).
+            rem = min(s.request.max_new_tokens - s.result.n_generated
+                      for s in (sched.slots[i] for i in active))
+            if e.fori_seg >= 2 and not e.capture_logits \
+                    and rem >= e.fori_seg \
+                    and not any(sched.slots[i].pending for i in active):
+                T = e.fori_seg
                 cache.prepare_decode(active)   # COW forks before any write
+                tok0 = np.zeros(B, np.int32)
+                pos0 = np.zeros(B, np.int32)
+                for i in active:
+                    tok0[i] = sched.slots[i].last_token
+                    pos0[i] = sched.slots[i].pos
+                part = slice_state(cache.state, cache.slot_axes, B)
+                seg = self.compiled.decode_segment(
+                    T, temperature=e.temperature)
+                toks_dev, new_part, rng = seg(
+                    self.params, part, jnp.asarray(tok0), jnp.asarray(pos0),
+                    rng)
+                cache.state = merge_state(cache.state, new_part,
+                                          cache.slot_axes, B)
+                cache.note_decode_tick(active, {i: T for i in active})
+                toks = np.asarray(toks_dev)    # ONE host sync for T tokens
+                host_syncs += 1
+                for i in active:
+                    s = sched.slots[i]
+                    stop = s.request.stop_token
+                    for t in range(T):
+                        sched.record_token(i, int(toks[i, t]))
+                        if stop is not None and int(toks[i, t]) == stop:
+                            break
+                ticks += T
+                fori_segments += 1
+                peak_used = max(peak_used, cache.pool.used_blocks)
+                peak_live = max(peak_live, cache.live_tokens())
+                evict_finished()
+                continue
+
+            # 2b. one decode tick over the occupied slots.  Slots catching
+            #     up on a prompt tail feed their next chunk_size prompt
+            #     tokens (a (B, k) catch-up cell, k from the chunk ladder);
+            #     caught-up slots advance one sampled token in column 0 of
+            #     the same tick.
+            cache.prepare_decode(active)       # COW forks before any write
+            need = max((min(len(sched.slots[i].pending), e.chunk_size)
+                        for i in active), default=1)
+            k_tick = bucket_for(max(need, 1), e.chunk_buckets)
+            fills: Dict[int, int] = {}
+            if k_tick > 1:
+                tokens = np.zeros((B, k_tick), np.int32)
+                positions = np.full((B, k_tick), -1, np.int32)
+                sel = np.zeros(B, np.int64)
+                for s in sched.slots[:B]:
+                    if s.free:
+                        continue
+                    if s.pending:
+                        m = min(len(s.pending), k_tick)
+                        tokens[s.index, :m] = s.pending[:m]
+                        positions[s.index, :m] = \
+                            s.pos + np.arange(m, dtype=np.int32)
+                        fills[s.index] = m
+                        sel[s.index] = m - 1
+                    else:
+                        tokens[s.index, 0] = s.last_token
+                        positions[s.index, 0] = s.pos
+                        fills[s.index] = 1
+            else:
                 tokens = np.zeros((B, 1), np.int32)
                 positions = np.zeros((B, 1), np.int32)
+                sel = np.zeros(B, np.int64)
                 for s in sched.slots[:B]:
                     if not s.free:
                         tokens[s.index, 0] = \
                             s.pending[0] if s.pending else s.last_token
                         positions[s.index, 0] = s.pos
-                part = slice_state(cache.state, cache.slot_axes, B)
-                logits, new_part, _ = self.compiled.decode(
-                    self.params, {"tokens": jnp.asarray(tokens),
-                                  "positions": jnp.asarray(positions)},
-                    part, jnp.int32(0))
-                cache.state = merge_state(cache.state, new_part,
-                                          cache.slot_axes, B)
-                cache.note_decode_tick(active)
-                rng, k = jax.random.split(rng)
-                toks = np.asarray(
-                    self._sample(logits[:, -1], k, e.temperature))
-                for sidx in active:
-                    s = sched.slots[sidx]
-                    if s.pending:
-                        catchup_tokens += 1
-                        sched.note_catchup(sidx)
-                        if s.pending:      # tail not done: discard sample
-                            continue
-                        # prompt fully resident: index its blocks, and the
-                        # sample from the last tail token's logits is the
-                        # first generated token
-                        cache.register_prompt(sidx)
-                        if e.capture_logits:
-                            s.result.logits.append(np.asarray(logits[sidx, -1]))
-                        sched.record_token(sidx, int(toks[sidx]), first=True)
-                    else:
-                        if e.capture_logits:
-                            s.result.logits.append(np.asarray(logits[sidx, -1]))
-                        sched.record_token(sidx, int(toks[sidx]))
-                ticks += 1
-                peak_used = max(peak_used, cache.pool.used_blocks)
-                peak_live = max(peak_live, cache.live_tokens())
-                evict_finished()
+                        fills[s.index] = 1
+            part = slice_state(cache.state, cache.slot_axes, B)
+            logits, new_part, _ = self.compiled.decode(
+                self.params, {"tokens": jnp.asarray(tokens),
+                              "positions": jnp.asarray(positions)},
+                part, jnp.int32(0))
+            cache.state = merge_state(cache.state, new_part,
+                                      cache.slot_axes, B)
+            cache.note_decode_tick(active, fills)
+            rng, k = jax.random.split(rng)
+            # each row samples from its last fed column's logits (column 0
+            # for plain decode rows, the chunk's last fill for catch-up rows)
+            last_lg = jnp.take_along_axis(
+                logits, jnp.asarray(sel)[:, None, None], axis=1)[:, 0]
+            toks = np.asarray(self._sample(last_lg, k, e.temperature))
+            host_syncs += 1
+            for sidx in active:
+                s = sched.slots[sidx]
+                if s.pending:
+                    m = fills[sidx]
+                    catchup_tokens += m
+                    sched.note_catchup(sidx, m)
+                    if s.pending:      # tail not done: discard sample
+                        continue
+                    # prompt fully resident: index its blocks, and the
+                    # sample from the last tail token's logits is the
+                    # first generated token
+                    cache.register_prompt(sidx)
+                    if e.capture_logits:
+                        s.result.logits.append(
+                            np.asarray(logits[sidx, int(sel[sidx])]))
+                    sched.record_token(sidx, int(toks[sidx]), first=True)
+                else:
+                    if e.capture_logits:
+                        s.result.logits.append(
+                            np.asarray(logits[sidx, int(sel[sidx])]))
+                    sched.record_token(sidx, int(toks[sidx]))
+            ticks += 1
+            peak_used = max(peak_used, cache.pool.used_blocks)
+            peak_live = max(peak_live, cache.live_tokens())
+            evict_finished()
 
         wall = time.perf_counter() - t0
         results = sched.results
@@ -390,8 +532,18 @@ class Engine:
             "p50_latency_s": pct(lats, 0.50),
             "p95_latency_s": pct(lats, 0.95),
             "p50_ttft_s": pct(ttfts, 0.50),
+            "p95_ttft_s": pct(ttfts, 0.95),
             "decode_ticks": ticks,
             "prefill_batches": prefill_batches,
+            # host-free / chunked loop accounting: host_syncs counts the
+            # device->host round-trips the loop performed (one per prefill
+            # sample, per tick sample, per fori segment)
+            "chunk_size": e.chunk_size,
+            "chunked_prefill": e.chunked_prefill,
+            "fori_seg": e.fori_seg,
+            "fori_segments": fori_segments,
+            "host_syncs": host_syncs,
+            "host_syncs_per_token": host_syncs / gen if gen else 0.0,
             "admissions": sched.n_admitted,
             "evictions": sched.n_evicted,
             "refills": sched.n_refills,
@@ -425,7 +577,10 @@ class Engine:
                  f"block={e.block_size} "
                  f"batch_buckets={list(e.batch_buckets)} "
                  f"prompt_buckets={list(e.prompt_buckets)} "
-                 f"prefix_cache={'on' if e.prefix_cache else 'off'}"]
+                 f"prefix_cache={'on' if e.prefix_cache else 'off'} "
+                 f"chunk={e.chunk_size}"
+                 f"{'+chunked_prefill' if e.chunked_prefill else ''} "
+                 f"fori_seg={e.fori_seg or 'off'}"]
         if self.last_report is not None:
             lines.append("  " +
                          self.last_report.describe().replace("\n", "\n  "))

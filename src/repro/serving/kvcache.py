@@ -338,12 +338,17 @@ class BlockLedger:
 
     # -- admit / decode / release -------------------------------------------
     def admit(self, slot: int, prompt: np.ndarray, reserve_tokens: int,
-              match: Optional[PrefixMatch] = None) -> List[int]:
+              match: Optional[PrefixMatch] = None,
+              resident: Optional[int] = None) -> List[int]:
         """Build ``slot``'s block chain: matched blocks (references adopted
         from the lock) followed by freshly allocated ones, plus the COW
         spare when charged.  Returns the chain.  The caller seeds device
         block tables from it and sets the slot's decode position to
-        ``match.covered`` (0-covered requests prefill the whole prompt)."""
+        ``match.covered`` (0-covered requests prefill the whole prompt).
+
+        ``resident`` overrides the initial token count (chunked-prefill
+        admissions start at 0: nothing is written yet — the whole prompt
+        drains through chunked catch-up ticks)."""
         if self.chains[slot]:
             raise RuntimeError(f"slot {slot} is occupied")
         toks = np.asarray(prompt, np.int32).reshape(-1)
@@ -363,7 +368,10 @@ class BlockLedger:
         if match is not None and match.needs_cow_spare:
             self.spares[slot] = fresh.pop()
         self.chains[slot] = matched + fresh
-        self.lens[slot] = match.covered if match is not None else prompt_len
+        if resident is not None:
+            self.lens[slot] = resident
+        else:
+            self.lens[slot] = match.covered if match is not None else prompt_len
         self._prompt_len[slot] = prompt_len
         self._registered[slot] = False
         if self.index is not None:
@@ -403,8 +411,8 @@ class BlockLedger:
         self.cow_forks += 1
         return ci, old, new
 
-    def note_write(self, slot: int) -> None:
-        self.lens[slot] += 1
+    def note_write(self, slot: int, n: int = 1) -> None:
+        self.lens[slot] += n
 
     def register_prompt(self, slot: int) -> None:
         """Index ``slot``'s fully-filled prompt blocks (call once the whole
@@ -744,6 +752,21 @@ class PagedKVCache:
         self._set_tables(slot, self._table_row(slot), match.covered)
         return chain
 
+    def admit_tail(self, slot: int, prompt: np.ndarray,
+                   reserve_tokens: int) -> List[int]:
+        """Chunked-prefill admission: allocate the slot's whole chain, point
+        its block-table row at it, and write *nothing* — resident length 0.
+        The engine drains the entire prompt through chunked catch-up ticks
+        (``chunk_size`` tokens per tick, interleaved with ongoing decodes),
+        sampling the first generated token from the last prompt token's
+        logits, exactly like an uncovered prefix-cache tail with zero
+        coverage."""
+        toks = np.asarray(prompt, np.int32).reshape(-1)
+        chain = self.ledger.admit(slot, toks, reserve_tokens, match=None,
+                                  resident=0)
+        self._set_tables(slot, self._table_row(slot), 0)
+        return chain
+
     def register_prompt(self, slot: int) -> None:
         """Index the slot's fully-filled prompt blocks (the engine calls
         this when a prefix-seeded request finishes catching up)."""
@@ -790,11 +813,13 @@ class PagedKVCache:
             self.state[e.ukey][e.skey] = new_st
 
     # -- decode progress -----------------------------------------------------
-    def note_decode_tick(self, active_slots) -> None:
+    def note_decode_tick(self, active_slots, counts=None) -> None:
         """Mirror the device-side ``len`` increment for live slots (the
-        device increments every row; only live slots count as live tokens)."""
+        device increments every row; only live slots count as live tokens).
+        ``counts`` maps slot -> tokens written this tick (chunked catch-up
+        rows advance by their chunk fill; plain decode rows by 1)."""
         for s in active_slots:
-            self.ledger.note_write(s)
+            self.ledger.note_write(s, 1 if counts is None else counts[s])
 
     def evict(self, slot: int) -> int:
         """Free ``slot``'s block chain and park it on the trash block.

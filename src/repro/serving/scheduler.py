@@ -127,6 +127,7 @@ class Admission:
     reserve_tokens: int
     covered: int = 0                   # prompt tokens seeded from the cache
     match: Any = None                  # locked PrefixMatch (engine consumes)
+    chunked: bool = False              # cold prompt drains through chunk ticks
 
 
 class Scheduler:
@@ -134,12 +135,17 @@ class Scheduler:
 
     def __init__(self, n_slots: int, block_size: int, pool: BlockPool, *,
                  max_seq_len: int, clock: Callable[[], float] = time.monotonic,
-                 prefix: Any = None):
+                 prefix: Any = None, chunk_prefill: bool = False):
         self.n_slots = n_slots
         self.block_size = block_size
         self.pool = pool
         self.max_seq_len = max_seq_len
         self.clock = clock
+        # chunked-prefill admission: cold prompts skip the monolithic
+        # bucketed prefill batch and instead drain their whole prompt
+        # through chunked catch-up ticks, interleaved with ongoing decodes
+        # (the engine advances them chunk_size tokens per tick)
+        self.chunk_prefill = chunk_prefill
         # prefix-cache hooks (duck-typed: the PagedKVCache / BlockLedger):
         # match_and_lock / unlock / fresh_blocks_needed
         self.prefix = prefix
@@ -217,25 +223,34 @@ class Scheduler:
             slot.served += 1
             slot.request = req
             covered = match.covered if match is not None else 0
-            slot.pos = covered if covered else req.prompt_len
-            slot.pending = req.prompt[covered:].tolist() if covered else []
+            chunked = self.chunk_prefill and not covered
+            if chunked:
+                # cold prompt under chunked prefill: the whole prompt is the
+                # pending tail, drained chunk_size tokens per decode tick
+                slot.pos = 0
+                slot.pending = req.prompt.tolist()
+            else:
+                slot.pos = covered if covered else req.prompt_len
+                slot.pending = req.prompt[covered:].tolist() if covered else []
             slot.result = RequestResult(
                 rid=req.rid, prompt_len=req.prompt_len,
                 t_submit=t_submit, t_admit=self.clock())
             self.n_admitted += 1
             out.append(Admission(slot.index, req, req.total_budget,
-                                 covered=covered, match=match))
+                                 covered=covered, match=match,
+                                 chunked=chunked))
         return out
 
     # -- decode progress -----------------------------------------------------
-    def note_catchup(self, slot_idx: int) -> None:
-        """One uncovered prompt-tail token was fed through a decode tick
-        (mid-sequence prefill): consume it and advance the position without
-        recording a generated token."""
+    def note_catchup(self, slot_idx: int, n: int = 1) -> None:
+        """``n`` uncovered prompt-tail tokens were fed through a decode tick
+        (mid-sequence prefill, chunked when n > 1): consume them and advance
+        the position without recording generated tokens."""
         slot = self.slots[slot_idx]
-        assert slot.pending, f"slot {slot_idx} has no pending prompt tail"
-        slot.pending.pop(0)
-        slot.pos += 1
+        assert len(slot.pending) >= n, \
+            f"slot {slot_idx} has {len(slot.pending)} pending, asked {n}"
+        del slot.pending[:n]
+        slot.pos += n
 
     def record_token(self, slot_idx: int, token: int, *,
                      first: bool = False) -> None:

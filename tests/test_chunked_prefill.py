@@ -1,0 +1,307 @@
+"""Chunked prefill + host-free decode segments: exactness gates.
+
+Every perf path added by the chunked/overlapped serving work must be
+byte-identical (token-for-token, and logit-for-logit where captured) to the
+plain one-token-per-tick host loop it replaces:
+
+* chunked prompt catch-up ((B, k) cells through the paged pool),
+* chunk ticks landing mid-COW-fork under the prefix cache,
+* left-padded bucketed prefill on the positional flash kernel,
+* ``fori_seg`` on-device decode segments (greedy AND sampled).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import flow as rflow
+from repro.configs.base import FlowConfig
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import Request, synthetic_requests
+
+from test_serving import (SERVE_SHAPE, _assert_results_identical, _serve_cm)
+
+
+def _run_vs_baseline(reqs, *, capture=True, base_kw=None, **fast_kw):
+    """Serve the same batch through the plain host loop and through the
+    perf-path config; returns (baseline, fast) reports."""
+    cm, params = _serve_cm()
+    kw = dict(max_batch=2, max_seq_len=64, block_size=8,
+              capture_logits=capture)
+    kw.update(base_kw or {})
+    base = Engine(cm, params, EngineConfig(**kw)).run(reqs)
+    fast = Engine(cm, params, EngineConfig(**kw, **fast_kw)).run(reqs)
+    return base, fast
+
+
+# ---------------------------------------------------------------------------
+# chunked prompt catch-up
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_chunked_prefill_matches_cold_byte_identical(k):
+    """Cold prompts drained k tokens per tick through the (B, k) catch-up
+    cell produce byte-identical tokens and sampled-step logits to the
+    batched-prefill baseline; the chunked run never joins a prefill batch."""
+    cm, params = _serve_cm()
+    reqs = synthetic_requests(6, cm.cfg.vocab_size, prompt_len=12,
+                              max_new_tokens=4, seed=41)
+    base, fast = _run_vs_baseline(reqs, chunked_prefill=True, chunk_size=k)
+    _assert_results_identical(base, fast)
+    assert base.metrics["prefill_batches"] >= 1
+    assert fast.metrics["prefill_batches"] == 0
+    assert fast.metrics["catchup_tokens"] >= sum(r.prompt_len for r in reqs)
+    assert fast.metrics["chunk_size"] == k and fast.metrics["chunked_prefill"]
+
+
+def test_chunk_tick_mid_cow_fork_matches_host_loop():
+    """A COW fork triggered *inside a multi-token chunk tick* stays
+    byte-identical to the one-token-per-tick host loop (the exactness
+    gate).  'a'/'b' warm the index with a 1.5-block prompt and finish
+    together, so the hits 'c'/'d' admit in the same wave and share the
+    indexed partial block; the long cold prompts keep k=4 chunk ticks
+    running, so the hit's first write — mid-block, into a block the index
+    and the sibling hit still hold — forks during a multi-token tick.
+    Tokens must also match the batched-prefill cold run (whose logit bits
+    may legitimately differ: a (B, 48) prefill cell and (B, 4) catch-up
+    cells round their matmuls differently)."""
+    cm, params = _serve_cm()
+    rng = np.random.RandomState(42)
+    p = rng.randint(0, cm.cfg.vocab_size, 12).astype(np.int32)
+    long1, long2 = (rng.randint(0, cm.cfg.vocab_size, 48).astype(np.int32)
+                    for _ in range(2))
+    reqs = [Request("a", p, max_new_tokens=2),
+            Request("b", p, max_new_tokens=2),
+            Request("l1", long1, max_new_tokens=8),
+            Request("l2", long2, max_new_tokens=8),
+            Request("c", p, max_new_tokens=4),
+            Request("d", p, max_new_tokens=4)]
+    kw = dict(max_batch=4, max_seq_len=64, block_size=8,
+              capture_logits=True, prompt_buckets=(16, 48, 64),
+              prefix_cache=True, chunked_prefill=True)
+    host = Engine(cm, params, EngineConfig(**kw, chunk_size=1)).run(reqs)
+    fast = Engine(cm, params, EngineConfig(**kw, chunk_size=4)).run(reqs)
+    _assert_results_identical(host, fast)
+    cold = Engine(cm, params, EngineConfig(
+        max_batch=4, max_seq_len=64, block_size=8,
+        prompt_buckets=(16, 48, 64))).run(reqs)
+    assert {r.rid: r.tokens for r in cold.results} == \
+        {r.rid: r.tokens for r in fast.results}
+    m = fast.metrics
+    assert m["prefix_hits"] >= 2
+    assert m["cow_forks"] >= 1          # hit forked its block mid-chunk-tick
+    assert m["prefill_batches"] == 0 and m["catchup_tokens"] > 0
+
+
+def test_chunked_prefill_mixed_lengths_with_decode_interleave():
+    """Chunk ticks interleave catch-up rows with rows already decoding —
+    staggered admissions (1 slot free at a time) still match the baseline."""
+    cm, params = _serve_cm()
+    reqs = synthetic_requests(5, cm.cfg.vocab_size, prompt_len=10,
+                              max_new_tokens=6, seed=43)
+    base, fast = _run_vs_baseline(
+        reqs, base_kw=dict(max_batch=2), chunked_prefill=True, chunk_size=4)
+    _assert_results_identical(base, fast)
+    assert fast.metrics["refills"] >= 1  # admissions landed mid-decode
+
+
+def test_chunked_prefill_rejected_for_recurrent_models():
+    """Recurrent temporal-mixing state advances one token per tick; the
+    engine must refuse chunked prefill rather than corrupt it."""
+    cm = rflow.compile("recurrentgemma-2b", SERVE_SHAPE,
+                       FlowConfig(mode="folded", precision="fp32"),
+                       smoke=True)
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params,
+                 EngineConfig(max_batch=2, max_seq_len=64, block_size=8,
+                              chunk_size=4, chunked_prefill=True))
+    with pytest.raises(ValueError, match="chunked prefill"):
+        eng.run([Request("x", np.arange(1, 9, dtype=np.int32),
+                         max_new_tokens=2)])
+
+
+def test_engine_config_validates_chunk_knobs():
+    with pytest.raises(ValueError, match="chunk_size"):
+        EngineConfig(max_seq_len=64, chunk_size=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        EngineConfig(max_seq_len=64, chunk_size=128)
+    with pytest.raises(ValueError, match="fori_seg"):
+        EngineConfig(fori_seg=1)
+    with pytest.raises(ValueError, match="rung 1"):
+        EngineConfig(chunk_size=4, chunk_buckets=(2, 4))
+    with pytest.raises(ValueError, match="end at chunk_size"):
+        EngineConfig(chunk_size=4, chunk_buckets=(1, 2))
+    assert EngineConfig(chunk_size=4).chunk_buckets == (1, 4)
+    assert EngineConfig(chunk_size=4,
+                        chunk_buckets=(4, 1, 2)).chunk_buckets == (1, 2, 4)
+    assert EngineConfig().chunk_buckets == (1,)
+
+
+# ---------------------------------------------------------------------------
+# host-free decode segments
+# ---------------------------------------------------------------------------
+
+def test_fori_segments_match_host_loop_greedy():
+    """Steady-state decode run as one on-device fori segment: same tokens
+    as the per-tick host loop, strictly fewer host syncs per token."""
+    cm, params = _serve_cm()
+    reqs = synthetic_requests(4, cm.cfg.vocab_size, prompt_len=8,
+                              max_new_tokens=8, seed=44, vary_lens=False)
+    base, fast = _run_vs_baseline(reqs, capture=False,
+                                  base_kw=dict(max_batch=4), fori_seg=4)
+    assert {r.rid: r.tokens for r in base.results} == \
+        {r.rid: r.tokens for r in fast.results}
+    assert fast.metrics["fori_segments"] >= 1
+    assert fast.metrics["host_syncs_per_token"] < \
+        base.metrics["host_syncs_per_token"]
+
+
+def test_fori_segments_match_host_loop_sampled():
+    """The segment loop splits the sampling rng exactly like the host tick,
+    so even temperature > 0 streams are byte-identical."""
+    cm, params = _serve_cm()
+    reqs = synthetic_requests(3, cm.cfg.vocab_size, prompt_len=8,
+                              max_new_tokens=6, seed=45, vary_lens=False)
+    base, fast = _run_vs_baseline(
+        reqs, capture=False,
+        base_kw=dict(max_batch=4, temperature=0.8, seed=9), fori_seg=3)
+    assert {r.rid: r.tokens for r in base.results} == \
+        {r.rid: r.tokens for r in fast.results}
+    assert fast.metrics["fori_segments"] >= 1
+
+
+def test_chunk_and_fori_compose():
+    """Both perf paths on at once (chunked catch-up feeding host-free
+    segments) still reproduce the plain loop, and the report surfaces the
+    new counters."""
+    cm, params = _serve_cm()
+    reqs = synthetic_requests(6, cm.cfg.vocab_size, prompt_len=12,
+                              max_new_tokens=8, seed=46)
+    base, fast = _run_vs_baseline(reqs, capture=False,
+                                  base_kw=dict(max_batch=2),
+                                  chunked_prefill=True, chunk_size=4,
+                                  fori_seg=4)
+    assert {r.rid: r.tokens for r in base.results} == \
+        {r.rid: r.tokens for r in fast.results}
+    m = fast.metrics
+    assert m["fori_segments"] >= 1 and m["catchup_tokens"] > 0
+    assert m["p95_ttft_s"] >= m["p50_ttft_s"] > 0
+    d = fast.describe()
+    assert "host_syncs/tok=" in d and "fori_segments=" in d
+
+
+# ---------------------------------------------------------------------------
+# kernel-level exactness: positional flash mask, (B, k) paged catch-up
+# ---------------------------------------------------------------------------
+
+def test_flash_positional_mask_matches_ref_and_pad_invariant():
+    """Left-padded positions on the Pallas flash kernel (interpret mode)
+    match the reference mask, and a padded row equals its unpadded serve."""
+    from repro.kernels.attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+    B, S, H, D = 2, 16, 2, 16
+    rng = np.random.RandomState(50)
+    q, k, v = (jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+               for _ in range(3))
+    pos = np.full((B, S), -1, np.int32)
+    for b, pad in enumerate((0, 5)):
+        pos[b, pad:] = np.arange(S - pad)
+    pos = jnp.asarray(pos)
+    out = flash_attention(q, k, v, positions=pos, interpret=True)
+    ref = flash_attention_ref(q, k, v, positions=pos)
+    # padded query rows are garbage-and-discarded by contract: compare the
+    # real rows only
+    for b, pad in enumerate((0, 5)):
+        np.testing.assert_allclose(np.asarray(out)[b, pad:],
+                                   np.asarray(ref)[b, pad:],
+                                   rtol=2e-5, atol=2e-5)
+    # pad invariance: the 11 real tokens of row 1 behave as an 11-long batch
+    solo = flash_attention_ref(q[1:, 5:], k[1:, 5:], v[1:, 5:])
+    np.testing.assert_allclose(np.asarray(out)[1, 5:], np.asarray(solo)[0],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_chunk_kernel_matches_ref():
+    """The (B, k) multi-query pool lookup (interpret mode) matches the
+    reference for full and padded chunks."""
+    from repro.kernels.decode_attention import paged_decode_attention
+    from repro.kernels.ref import paged_decode_attention_ref
+    B, Sq, H, KV, D, bs, nblk = 2, 4, 4, 2, 16, 8, 4
+    NB = 1 + B * nblk
+    rng = np.random.RandomState(51)
+    q = jnp.asarray(rng.randn(B, Sq, H, D), jnp.float32)
+    kp = jnp.asarray(rng.randn(NB, bs, KV, D), jnp.float32)
+    vp = jnp.asarray(rng.randn(NB, bs, KV, D), jnp.float32)
+    bt = jnp.asarray(1 + np.arange(B * nblk).reshape(B, nblk), jnp.int32)
+    lens = jnp.asarray([10, 7], jnp.int32)
+    qpos = lens[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+    out = paged_decode_attention(q, kp, vp, bt, lens, qpos=qpos,
+                                 interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, bt, lens, qpos=qpos,
+                                     compute_dtype=jnp.float32)
+    assert out.shape == (B, Sq, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # a ragged chunk: row 1 only carries 2 real tokens; its real rows must
+    # be untouched by the padding rows' presence
+    qp2 = qpos.at[1, 2:].set(-1)
+    out2 = paged_decode_attention(q, kp, vp, bt, lens, qpos=qp2,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(out2)[1, :2],
+                               np.asarray(ref)[1, :2], rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(out2)[0], np.asarray(ref)[0],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_kops_flash_attention_threads_positions():
+    """Regression: the kernel-registry wrapper must forward ``positions``
+    to the flash backend instead of silently dropping it."""
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import flash_attention_ref
+    B, S, H, D = 1, 8, 2, 16
+    rng = np.random.RandomState(52)
+    q, k, v = (jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+               for _ in range(3))
+    pos = jnp.asarray(np.concatenate(
+        [np.full(3, -1, np.int32), np.arange(5, dtype=np.int32)])[None])
+    got = kops.flash_attention(q, k, v, positions=pos, interpret=True)
+    want = flash_attention_ref(q, k, v, positions=pos)
+    np.testing.assert_allclose(np.asarray(got)[:, 3:],
+                               np.asarray(want)[:, 3:],
+                               rtol=2e-5, atol=2e-5)
+    # and it must differ from the positions-free call (the old bug made
+    # them identical)
+    nopos = kops.flash_attention(q, k, v, interpret=True)
+    assert not np.allclose(np.asarray(got)[:, 3:], np.asarray(nopos)[:, 3:])
+
+
+# ---------------------------------------------------------------------------
+# autotune: chunk width + segment length are part of the pinnable outcome
+# ---------------------------------------------------------------------------
+
+def test_autotune_tunes_chunk_and_fori():
+    from repro.serving.autotune import ServingProfile, autotune_decode
+    prof = ServingProfile(name="chunk", batch_buckets=(2,), max_seq_len=32,
+                          block_sizes=(8,), chunk_sizes=(1, 4),
+                          fori_segs=(0, 4))
+    at = autotune_decode("llama3.2-1b", profile=prof, smoke=True,
+                         validate="none", iters=1, tune_fori=True)
+    assert set(at.chunk_times_us) == {1, 4}
+    assert at.chunk_size in (1, 4) and at.fori_seg in (0, 4)
+    assert set(at.fori_times_s) == {"0", "4"}
+    ec = at.engine_config()
+    assert ec.chunk_size == at.chunk_size
+    assert ec.chunked_prefill == (at.chunk_size > 1)
+    assert ec.fori_seg == at.fori_seg
+    d = at.describe()
+    assert "chunk_us_per_tok:" in d and "fori_replay_s:" in d
+
+
+def test_serving_profile_validates_chunk_candidates():
+    from repro.serving.autotune import ServingProfile
+    with pytest.raises(ValueError, match="chunk sizes"):
+        ServingProfile(max_seq_len=32, block_sizes=(8,), chunk_sizes=(0,))
+    with pytest.raises(ValueError, match="chunk sizes"):
+        ServingProfile(max_seq_len=32, block_sizes=(8,), chunk_sizes=(64,))
+    with pytest.raises(ValueError, match="fori segment"):
+        ServingProfile(max_seq_len=32, block_sizes=(8,), fori_segs=(1,))
