@@ -160,7 +160,8 @@ def table6_pass_stats() -> List[Tuple]:
 def table7_tuned_vs_base() -> List[Tuple]:
     """Explorer-tuned vs base flow, by the analytic cost model: predicted
     step time and per-device footprint (the tuned-vs-base delta the paper's
-    Table IV measures end-to-end)."""
+    Table IV measures end-to-end), plus how many candidates the screens
+    pruned statically vs how many paid a compile."""
     from repro.core import dse
     from repro.core.estimator import estimate_footprint, estimate_step_seconds
     rows = []
@@ -174,7 +175,8 @@ def table7_tuned_vs_base() -> List[Tuple]:
         fp_t, st_t = er.best.footprint_bytes, er.best.step_s
         rows.append((name, st_b["step_s"] * 1e6, st_t * 1e6,
                      fp_b["total"], fp_t, st_b["step_s"] / max(st_t, 1e-12),
-                     er.best.knob_str()))
+                     er.best.knob_str(),
+                     er.n_rejected + er.n_static_pruned, len(er.validated)))
     return rows
 
 

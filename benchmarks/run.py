@@ -80,11 +80,12 @@ def main(argv=None) -> None:
             print(f"table5/{name}/handwritten_xla,{t_hand:.1f},")
         for name, pname, compact in T.table6_pass_stats():
             print(f"table6/{name}/{pname},0,{compact}")
-        for (name, us_b, us_t, fp_b, fp_t, speed,
-             knobs) in T.table7_tuned_vs_base():
+        for (name, us_b, us_t, fp_b, fp_t, speed, knobs,
+             n_pruned, n_compiled) in T.table7_tuned_vs_base():
             print(f"table7/{name}/base,{us_b:.1f},est_bytes={fp_b:.3g}")
             print(f"table7/{name}/tuned,{us_t:.1f},est_bytes={fp_t:.3g};"
-                  f"est_speedup={speed:.2f}x;knobs={knobs}")
+                  f"est_speedup={speed:.2f}x;knobs={knobs};"
+                  f"pruned={n_pruned};compiled={n_compiled}")
         for (name, label, fp, step, bound,
              comm) in T.table8_sharded_vs_unsharded():
             print(f"table8/{name}/{label},{step * 1e6:.1f},"

@@ -1,0 +1,34 @@
+"""repro.analysis — static verification of execution plans, kernel
+contracts, and serving invariants.
+
+The paper's compilation flow is safe to automate because every optimization
+is checked before synthesis; this package is that gate for the repro stack.
+``verify_plan(plan)`` runs a suite of declarative checkers over a built
+:class:`~repro.core.plan.ExecutionPlan` *without compiling* and returns
+structured :class:`Diagnostic` objects (stable code, severity, provenance).
+It is wired in three places:
+
+* ``repro.flow.compile(verify=True)`` raises :class:`PlanVerificationError`
+  with the full diagnostic list before any jit;
+* ``repro.core.dse.explore`` statically prunes invalid candidates before
+  compile-in-the-loop validation (``ExploreResult.n_static_pruned``);
+* ``python -m repro.launch.check --cfg lenet5`` runs it from CI.
+
+:mod:`repro.analysis.rules` is additionally the single source of truth for
+the serving/mesh invariants that ``EngineConfig.__post_init__``,
+``ServingProfile`` and ``split_rejection_reason`` used to duplicate.
+"""
+from repro.analysis.diagnostics import (  # noqa: F401
+    DIAGNOSTIC_CODES, ERROR, WARNING, Diagnostic, PlanVerificationError,
+    VerificationResult)
+from repro.analysis.checkers import (  # noqa: F401
+    CHECKERS, static_flow_diagnostics, verify_engine_config, verify_pipeline,
+    verify_plan)
+from repro.analysis import rules  # noqa: F401
+
+__all__ = [
+    "CHECKERS", "DIAGNOSTIC_CODES", "Diagnostic", "ERROR",
+    "PlanVerificationError", "VerificationResult", "WARNING", "rules",
+    "static_flow_diagnostics", "verify_engine_config", "verify_pipeline",
+    "verify_plan",
+]

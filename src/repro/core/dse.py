@@ -67,12 +67,15 @@ class ExploreResult:
     validated: List[Dict[str, Any]]      # compile-in-the-loop measurements
     budget_bytes: int
     n_rejected: int = 0                  # uneven-shard candidates screened out
+    n_static_pruned: int = 0             # statically-invalid candidates the
+                                         # verifier dropped before any compile
 
     def describe(self) -> str:
         c = self.best
         lines = [
             f"dse[{self.plan.cfg.name} x {self.plan.shape.name}] "
             f"enumerated={self.n_enumerated} rejected={self.n_rejected} "
+            f"static_pruned={self.n_static_pruned} "
             f"pruned_to={len(self.candidates)} "
             f"validated={len(self.validated)}",
             f"  budget: {self.budget_bytes / 2 ** 30:.1f} GiB/device",
@@ -268,6 +271,12 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
     rule, across devices).  An explicit ``mesh`` (MeshSpec / axis-size dict /
     jax Mesh) pins the factorization instead, like a pinned kernel backend.
 
+    Before any scoring, the static verifier screens the space: candidates
+    whose flow knobs hold values no pass or registry accepts (F501) are
+    dropped, and each top-k survivor's *plan* is verified
+    (:func:`repro.analysis.verify_plan`) before the validator pays a compile
+    for it — both counted in ``ExploreResult.n_static_pruned``.
+
     Estimator scoring (roofline + footprint + the mesh's communication cost)
     prunes the full space; the top-k survivors are validated when a
     ``validator`` is given (see :func:`compile_validator` and
@@ -310,26 +319,42 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
     budget = tuning.hbm_bytes
     k = top_k if top_k is not None else tuning.top_k
 
+    from repro.analysis.rules import flow_knob_rejection
     from repro.core.passes.sharding import split_rejection_reason
     enumerated = enumerate_candidates(cfg, shape, flow0, space=space)
+    # static knob screen (F501): a flow holding a value no pass or registry
+    # accepts would crash the builder or the compiler — drop it before any
+    # plan is built.  Unlike the mesh screen this is never readmitted.
+    n_static_pruned = 0
+    statically_valid = []
+    for flow, knobs in enumerated:
+        if flow_knob_rejection(flow) is not None:
+            n_static_pruned += 1
+            continue
+        statically_valid.append((flow, knobs))
+    if not statically_valid and enumerated:
+        reasons = sorted({r for r in (flow_knob_rejection(f)
+                                      for f, _ in enumerated) if r})
+        raise ValueError("explore: every candidate failed the static flow "
+                         "screen: " + "; ".join(reasons))
     # the divisibility screen applies to *searched* splits only: a pinned
     # mesh (compile(mesh=...)) is a given — the solver simply leaves axes it
     # cannot use unsharded, exactly as the launch wiring always did
     searching = flow0.mesh_split is None
     survivors = []
     n_rejected = 0
-    for flow, knobs in enumerated:
+    for flow, knobs in statically_valid:
         if searching and flow.mesh_split is not None and \
                 split_rejection_reason(cfg, shape, flow, flow.mesh_split):
             n_rejected += 1            # uneven shards never survive pruning
             continue
         survivors.append((flow, knobs))
-    if not survivors and enumerated:
+    if not survivors and statically_valid:
         # every split was screened out (e.g. a CNN whose batch doesn't cover
         # the device count).  The screen is advisory, not fatal: the solver
         # leaves axes it cannot use unsharded, so any split still compiles —
         # readmit everything and let the estimator ranking decide.
-        survivors, n_rejected = enumerated, 0
+        survivors, n_rejected = statically_valid, 0
     cands: List[Candidate] = []
     for flow, knobs in survivors:
         fp = estimator.estimate_footprint(cfg, shape, flow, devices)
@@ -348,9 +373,17 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
     validated: List[Dict[str, Any]] = []
     best = top[0]
     if validator is not None:
+        from repro.analysis import verify_plan as _verify_plan
+        from repro.core.plan import _build_plan as _bp
         chosen = None
         chosen_t = float("inf")
         for c in top:
+            # plan-level static gate: build (cheap, milliseconds) and verify
+            # before paying a compile — an invalid plan never reaches the
+            # validator
+            if not _verify_plan(_bp(cfg, c.flow, shape)).ok:
+                n_static_pruned += 1
+                continue
             r = dict(validator(c.flow))
             r["knobs"] = c.knob_str()
             r["fits"] = bool(r["per_device_bytes"] < budget)
@@ -371,7 +404,8 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
     plan = _build_plan(cfg, best.flow, shape)
     result = ExploreResult(best=best, plan=plan, candidates=pool,
                            n_enumerated=len(enumerated), validated=validated,
-                           budget_bytes=budget, n_rejected=n_rejected)
+                           budget_bytes=budget, n_rejected=n_rejected,
+                           n_static_pruned=n_static_pruned)
     if use_cache:
         _EXPLORE_CACHE[fp_key] = result
     return result

@@ -14,6 +14,7 @@ from repro.core.passmanager import Pass, PlanContext
 class KernelSelectPass(Pass):
     name = "kernels"
     paper = "backend selection (multi-backend lowering)"
+    writes = ("kernels",)
 
     def run(self, ctx: PlanContext) -> None:
         from repro.kernels.registry import REGISTRY

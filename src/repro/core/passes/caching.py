@@ -29,6 +29,8 @@ def run(flow) -> CachingPlan:
 class CachingPass(Pass):
     name = "caching"
     paper = "CW §IV-D"
+    reads = ("graph",)
+    writes = ("cache",)
 
     def run(self, ctx: PlanContext) -> None:
         cp = run(ctx.flow)

@@ -60,6 +60,8 @@ def run(graph: Graph, *, enabled: bool, min_reps: int = 2) -> List[Unit]:
 class FoldingPass(Pass):
     name = "folding"
     paper = "PK §IV-H"
+    reads = ("graph", "stream")
+    writes = ("units",)
 
     def run(self, ctx: PlanContext) -> None:
         stream = ctx.artifacts["stream"]      # runs after StreamingPass

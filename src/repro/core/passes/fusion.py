@@ -98,6 +98,8 @@ def run(graph: Graph, *, fold_bn: bool) -> Graph:
 class FusionPass(Pass):
     name = "fusion"
     paper = "LF §IV-C"
+    reads = ("graph",)
+    writes = ("graph",)
 
     def applies_to(self, cfg, flow, shape) -> bool:
         return flow.fuse_epilogues

@@ -33,6 +33,8 @@ def run(flow, shape) -> PrecisionPlan:
 class PrecisionPass(Pass):
     name = "precision"
     paper = "OF §IV-I"
+    reads = ("graph",)
+    writes = ("prec",)
 
     def run(self, ctx: PlanContext) -> None:
         prec = run(ctx.flow, ctx.shape)

@@ -261,32 +261,14 @@ def split_rejection_reason(cfg, shape, flow,
     """Divisibility screen (the paper's rule 2, across devices): returns the
     rejection reason (truthy => reject), or None when the split yields even
     shards.  Used by the explorer to prune *searched* candidates before
-    estimator scoring; pinned meshes bypass it."""
-    sizes = dict(split)
-    dp_axes, tp_axis, pp_axis = split_roles(flow, split)
-    dp = 1
-    for a in dp_axes:
-        dp *= sizes.get(a, 1)
-    tp = sizes.get(tp_axis, 1) if tp_axis else 1
-    pp = sizes.get(pp_axis, 1) if pp_axis else 1
-    if shape.global_batch % dp != 0:
-        return f"batch {shape.global_batch} not divisible by dp={dp}"
-    if tp > 1:
-        if cfg.family == "cnn":
-            return "tp axis would idle for the cnn family"
-        # the solver shards the first divisible TP_ROLE dim — viable as soon
-        # as any of them divides
-        dims = ([cfg.moe.num_experts] if cfg.moe else []) + \
-            [cfg.d_ff, cfg.padded_vocab] + \
-            ([cfg.attention.n_heads] if cfg.attention else [])
-        if not any(d % tp == 0 for d in dims):
-            return f"tp={tp} divides none of the tp-shardable dims {dims}"
-    if pp > 1:
-        if shape.kind != "train" or cfg.family == "cnn":
-            return "pp applies to LM train cells only"
-        if cfg.n_layers % pp != 0:
-            return f"{cfg.n_layers} layers not divisible by pp={pp}"
-    return None
+    estimator scoring; pinned meshes bypass it.
+
+    The rule itself lives in :mod:`repro.analysis.rules` (shared with the
+    static verifier's M401/M402/M403 diagnostics); this is the
+    string-returning legacy surface."""
+    from repro.analysis.rules import mesh_split_rejection
+    hit = mesh_split_rejection(cfg, shape, flow, split)
+    return hit[1] if hit is not None else None
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +278,8 @@ def split_rejection_reason(cfg, shape, flow,
 class ShardingPass(Pass):
     name = "sharding"
     paper = "partitioning (§IV-J factors across the mesh)"
+    reads = ("graph", "units")
+    writes = ("sharding",)
 
     def _split_for(self, ctx: PlanContext
                    ) -> Optional[Tuple[Tuple[str, int], ...]]:

@@ -70,6 +70,8 @@ def run(graph, cfg, flow, mesh_axes: Tuple[str, ...] = ()) -> StreamPlan:
 class StreamingPass(Pass):
     name = "streaming"
     paper = "CH/AR/CE §IV-E–G"
+    reads = ("graph",)
+    writes = ("stream",)
 
     def run(self, ctx: PlanContext) -> None:
         sp = run(ctx.graph, ctx.cfg, ctx.flow, ctx.mesh_axes)

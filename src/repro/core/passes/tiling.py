@@ -110,6 +110,8 @@ def run(cfg, shape, flow) -> Dict[str, object]:
 class TilingPass(Pass):
     name = "tiling"
     paper = "LU/LT §IV-A/B/J"
+    reads = ("graph",)
+    writes = ("tiles",)
 
     def run(self, ctx: PlanContext) -> None:
         tiles = run(ctx.cfg, ctx.shape, ctx.flow)

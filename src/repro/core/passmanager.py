@@ -54,6 +54,12 @@ class Pass:
 
     name: str = "?"
     paper: str = ""                        # paper-section tag, e.g. "LF §IV-C"
+    # dataflow contract over PlanContext artifacts ("graph" stands for
+    # ctx.graph): which keys run() consumes and which it deposits.  The
+    # static verifier (repro.analysis.verify_pipeline) orders-checks these
+    # (P101 reader-before-writer, P102 required-artifact-never-written).
+    reads: Tuple[str, ...] = ()
+    writes: Tuple[str, ...] = ()
 
     def applies_to(self, cfg: ModelConfig, flow: FlowConfig,
                    shape: ShapeConfig) -> bool:
@@ -79,6 +85,7 @@ class GraphBuildPass(Pass):
 
     name = "graph"
     paper = "IR build (Relay analogue)"
+    writes = ("graph",)
 
     def run(self, ctx: PlanContext) -> None:
         if ctx.input_graph is not None:

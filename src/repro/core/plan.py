@@ -37,6 +37,9 @@ class ExecutionPlan:
     pass_stats: Dict[str, Dict[str, Any]] = field(default_factory=dict)
     pass_timings_ms: Dict[str, float] = field(default_factory=dict)
     trace: List[str] = field(default_factory=list)
+    # set by repro.analysis.verify_plan / flow.compile(verify=True);
+    # an analysis.diagnostics.VerificationResult when the plan was verified
+    verification: Optional[Any] = None
 
     @property
     def cache_len(self) -> int:
@@ -83,6 +86,8 @@ class ExecutionPlan:
             lines.append(
                 f"  kernels: backend={self.flow.kernel_backend} " +
                 " ".join(f"{op}={self.kernels[op]}" for op in accel))
+        if self.verification is not None:
+            lines.append(f"  verify: {self.verification.summary_line()}")
         if stats:
             lines.append("  pass stats:")
             for name in self.pass_stats:

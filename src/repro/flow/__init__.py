@@ -430,6 +430,7 @@ def compile(arch_or_cfg: Union[str, ModelConfig],
             autotune: bool = False,
             mesh=None,
             validate: str = "compile",
+            verify: bool = False,
             smoke: bool = False) -> CompiledModel:
     """Compile one (model, shape) cell through the whole flow.
 
@@ -453,6 +454,12 @@ def compile(arch_or_cfg: Union[str, ModelConfig],
         ``"measure"`` (AOT-compile *and* wall-clock the stage via
         :meth:`CompiledModel.measure`, ranking survivors by measured step
         time).
+      verify: run the static plan verifier (:func:`repro.analysis.verify_plan`)
+        over the built plan *before any jit*.  The result is recorded on
+        ``plan.verification`` (one ``verify:`` line in ``describe()``); any
+        error-severity diagnostic raises
+        :class:`~repro.analysis.PlanVerificationError` carrying the full
+        diagnostic list.
       smoke: with a string arch, select the reduced (CPU-runnable) config.
     """
     cfg = _resolve_cfg(arch_or_cfg, smoke)
@@ -492,6 +499,12 @@ def compile(arch_or_cfg: Union[str, ModelConfig],
         plan = explore_result.plan          # already built for the best flow
     else:
         plan = _build_plan(cfg, flow, shape, mesh_axes=mesh_axes, rules=rules)
+    if verify:
+        from repro.analysis import PlanVerificationError, verify_plan
+        result = verify_plan(plan)
+        plan.verification = result
+        if not result.ok:                   # gate: no jit for a bad plan
+            raise PlanVerificationError(result)
     build_s = time.perf_counter() - t0
     return CompiledModel(plan, mesh=mesh_obj, explore_result=explore_result,
                          build_s=build_s)

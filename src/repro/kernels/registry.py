@@ -22,7 +22,10 @@ This module is that seam for the repro stack:
 
 Call-site capability predicates (dtype/rank/attribute constraints that are
 only known with concrete operands) are checked at dispatch time by
-:func:`plan_kernel`; a failing predicate falls back to the reference path.
+:func:`plan_kernel`; a failing predicate falls back to the reference path
+with a machine-readable reason (``DISPATCH_REJECTIONS`` counts them, and
+the static verifier surfaces the statically-decidable ones as ``K204``
+diagnostics via each impl's declared :class:`KernelContract`).
 """
 from __future__ import annotations
 
@@ -51,20 +54,59 @@ def _default_platform() -> str:
 
 
 @dataclass(frozen=True)
+class KernelContract:
+    """The statically-checkable contract a kernel impl declares; consumed by
+    :mod:`repro.analysis` (``verify_plan``) without compiling anything.
+
+    * ``tile_key``/``workingset`` — which ``plan.tiles`` entry the kernel's
+      BlockSpecs come from and its VMEM working set ``(tile, cfg) -> bytes``
+      (checked against ``flow.vmem_budget_bytes``: K202);
+    * ``donation_safe`` — whether the kernel's ``input_output_aliases`` use
+      is safe under donated state (a donation-unsafe kernel under
+      ``cache.donate_state`` is K203);
+    * ``index_space`` — ``"block_table"`` marks a scalar-prefetch gather
+      whose indices must stay inside the paged pool (K205 checks the pool
+      geometry on the serving side);
+    * ``static_reject`` — the statically-decidable part of the capability
+      predicate, ``(op_attrs, cfg) -> Optional[reason]``: a non-None reason
+      means dispatch will silently fall back to ref (surfaced as K204)."""
+    tile_key: Optional[str] = None
+    workingset: Optional[Callable[[Any, Any], int]] = None
+    donation_safe: bool = True
+    index_space: Optional[str] = None
+    static_reject: Optional[Callable[[Dict[str, Any], Any],
+                                     Optional[str]]] = None
+
+
+@dataclass(frozen=True)
 class KernelImpl:
     """One registered kernel implementation.
 
     ``supports`` is the call-site capability predicate: it receives the
     keyword facts the op layer passes to :func:`plan_kernel` (operand arrays,
     attrs like ``groups``/``window``) and returns whether this implementation
-    can handle them.  ``platforms`` gates plan-time resolution (a Pallas
-    kernel compiled through Mosaic is TPU-only; in interpret mode it runs
-    anywhere)."""
+    can handle them.  ``rejects`` is its machine-readable form — same facts
+    in, ``None`` (accepted) or a reason string out; when registered,
+    ``supports`` is derived from it.  ``platforms`` gates plan-time
+    resolution (a Pallas kernel compiled through Mosaic is TPU-only; in
+    interpret mode it runs anywhere).  ``contract`` is the declared static
+    contract the verifier checks (see :class:`KernelContract`)."""
     op: str
     backend: str
     fn: Callable
     supports: Callable[..., bool] = field(default=lambda **kw: True)
     platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
+    rejects: Optional[Callable[..., Optional[str]]] = None
+    contract: Optional[KernelContract] = None
+
+    def reject_reason(self, **facts) -> Optional[str]:
+        """``None`` when this impl can serve the call-site facts, else the
+        machine-readable reason dispatch falls back to the reference path."""
+        if self.rejects is not None:
+            return self.rejects(**facts)
+        if self.supports(**facts):
+            return None
+        return f"capability predicate rejected {self.op}/{self.backend}"
 
     def __repr__(self) -> str:
         return f"<KernelImpl {self.op}/{self.backend}>"
@@ -79,16 +121,23 @@ class KernelRegistry:
     # -- registration -------------------------------------------------------
     def register(self, op: str, backend: str, fn: Optional[Callable] = None,
                  *, supports: Optional[Callable[..., bool]] = None,
+                 rejects: Optional[Callable[..., Optional[str]]] = None,
+                 contract: Optional[KernelContract] = None,
                  platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")):
         """Register ``fn`` as the ``backend`` implementation of ``op``.
-        Usable directly or as a decorator."""
+        Usable directly or as a decorator.  ``rejects`` is the machine-
+        readable capability predicate (facts -> Optional[reason]); when
+        given, ``supports`` is derived from it."""
         backend = canon_backend(backend)
         if backend == "auto":
             raise ValueError("'auto' is a resolution policy, not a backend")
+        if rejects is not None and supports is None:
+            supports = lambda **kw: rejects(**kw) is None  # noqa: E731
 
         def _add(f: Callable) -> Callable:
             self._impls[(op, backend)] = KernelImpl(
-                op, backend, f, supports or (lambda **kw: True), platforms)
+                op, backend, f, supports or (lambda **kw: True), platforms,
+                rejects=rejects, contract=contract)
             return f
 
         return _add if fn is None else _add(fn)
@@ -163,14 +212,20 @@ class KernelRegistry:
 
 REGISTRY = KernelRegistry()
 
+# dispatch-time fall-throughs to ref, keyed by (op, machine-readable reason).
+# The verifier catches the statically-decidable subset (K204) at plan time;
+# this counter makes the residual operand-dependent ones observable too.
+DISPATCH_REJECTIONS: Dict[Tuple[str, str], int] = {}
+
 
 def plan_kernel(plan, op: str, **facts) -> Optional[Tuple[Callable, bool]]:
     """Dispatch helper for the op layer.
 
     Returns ``(fn, interpret)`` when the plan resolves ``op`` to a Pallas
     implementation whose capability predicate accepts the call-site
-    ``facts``; ``None`` means take the reference path.  Plans built by
-    pipelines without the ``kernels`` pass fall back to resolving the flow's
+    ``facts``; ``None`` means take the reference path (the reject reason is
+    recorded in :data:`DISPATCH_REJECTIONS`).  Plans built by pipelines
+    without the ``kernels`` pass fall back to resolving the flow's
     ``kernel_backend`` on the fly."""
     resolved = plan.kernels.get(op) if plan.kernels else None
     if resolved is None:
@@ -178,7 +233,10 @@ def plan_kernel(plan, op: str, **facts) -> Optional[Tuple[Callable, bool]]:
     if resolved not in ("pallas", "pallas_interpret"):
         return None
     impl = REGISTRY.get(op, "pallas")
-    if not impl.supports(**facts):
+    reason = impl.reject_reason(**facts)
+    if reason is not None:
+        key = (op, reason)
+        DISPATCH_REJECTIONS[key] = DISPATCH_REJECTIONS.get(key, 0) + 1
         return None
     return impl.fn, resolved == "pallas_interpret"
 
@@ -187,39 +245,104 @@ def plan_kernel(plan, op: str, **facts) -> Optional[Tuple[Callable, bool]]:
 # Built-in Pallas registrations (the kernels/ package)
 # ---------------------------------------------------------------------------
 
+def _matmul_reject(x=None, w=None, **kw) -> Optional[str]:
+    if x is None or w is None:
+        return "matmul operands not provided to the dispatch predicate"
+    if not (x.ndim >= 2 and w.ndim == 2):
+        return (f"operand ranks (x.ndim={x.ndim}, w.ndim={w.ndim}) need "
+                "x.ndim >= 2 and w.ndim == 2")
+    return None
+
+
+def _attention_reject(window=None, cross=False, **kw) -> Optional[str]:
+    # window == 0 is a degenerate cell some configs use to disable the
+    # flash path; cross-attention caches K/V outside the kernel
+    if window == 0:
+        return "window=0 disables the flash path"
+    if cross:
+        return "cross-attention caches K/V outside the kernel"
+    return None
+
+
+def _attention_static_reject(attrs, cfg) -> Optional[str]:
+    return _attention_reject(window=attrs.get("window"),
+                             cross=attrs.get("cross", False))
+
+
+def _conv2d_reject(groups=1, **kw) -> Optional[str]:
+    if groups != 1:
+        return f"grouped conv (groups={groups}) has no Pallas path"
+    return None
+
+
+def _matmul_workingset(tile, cfg) -> int:
+    # x(bm,bk) + w(bk,bn) in bf16 + fp32 accumulator + bf16 out tile —
+    # the same model select_matmul_tile sizes against (passes/tiling.py)
+    bm, bk, bn = tile
+    return (bm * bk + bk * bn) * 2 + bm * bn * (4 + 2)
+
+
+def _attention_workingset(tile, cfg) -> int:
+    # q, k, v tiles + fp32 scores + fp32 accumulator
+    bq, bk = tile
+    hd = cfg.attention.head_dim if cfg.attention is not None else 0
+    return (bq + 2 * bk) * hd * 2 + bq * bk * 4 + bq * hd * 4
+
+
+def _decode_attention_workingset(tile, cfg) -> int:
+    # one K and one V block of block_k positions + fp32 partials
+    bk = int(tile)
+    hd = cfg.attention.head_dim if cfg.attention is not None else 0
+    return 2 * bk * hd * 2 + bk * 4
+
+
+_MATMUL_CONTRACT = KernelContract(
+    tile_key="matmul", workingset=_matmul_workingset)
+
+
 def _register_builtin():
     from repro.kernels import ops as kops
     from repro.kernels.lru_scan import lru_scan
 
-    REGISTRY.register(
-        "matmul", "pallas", kops.matmul_fused,
-        supports=lambda x=None, w=None, **kw:
-            x is not None and w is not None and x.ndim >= 2 and w.ndim == 2)
-    REGISTRY.register(
-        "glu_matmul", "pallas", kops.matmul_fused,
-        supports=lambda x=None, w=None, **kw:
-            x is not None and w is not None and x.ndim >= 2 and w.ndim == 2)
+    REGISTRY.register("matmul", "pallas", kops.matmul_fused,
+                      rejects=_matmul_reject, contract=_MATMUL_CONTRACT)
+    REGISTRY.register("glu_matmul", "pallas", kops.matmul_fused,
+                      rejects=_matmul_reject, contract=_MATMUL_CONTRACT)
     REGISTRY.register(
         "attention", "pallas", kops.flash_attention,
-        # window == 0 is a degenerate cell some configs use to disable the
-        # flash path; cross-attention caches K/V outside the kernel
-        supports=lambda window=None, cross=False, **kw:
-            window != 0 and not cross)
-    REGISTRY.register("decode_attention", "pallas", kops.decode_attention)
+        rejects=_attention_reject,
+        contract=KernelContract(tile_key="attention",
+                                workingset=_attention_workingset,
+                                static_reject=_attention_static_reject))
+    REGISTRY.register(
+        "decode_attention", "pallas", kops.decode_attention,
+        contract=KernelContract(tile_key="decode_attention",
+                                workingset=_decode_attention_workingset))
     # paged-KV serving path: the Pallas kernel gathers pool blocks through
     # the block table (scalar prefetch); the explicit ref entry is the
-    # fallback the serving engine's decode uses off-TPU
+    # fallback the serving engine's decode uses off-TPU.  index_space
+    # declares the gather bounds contract the serving verifier checks
+    # against the pool geometry (K205).
     from repro.kernels.ref import copy_block_ref, paged_decode_attention_ref
+    _paged = KernelContract(index_space="block_table")
     REGISTRY.register("paged_decode_attention", "pallas",
-                      kops.paged_decode_attention)
+                      kops.paged_decode_attention, contract=_paged)
     REGISTRY.register("paged_decode_attention", "ref",
-                      paged_decode_attention_ref)
-    # prefix-cache copy-on-write fork: one pool block copied over another
-    REGISTRY.register("copy_block", "pallas", kops.copy_block)
-    REGISTRY.register("copy_block", "ref", copy_block_ref)
+                      paged_decode_attention_ref, contract=_paged)
+    # prefix-cache copy-on-write fork: one pool block copied over another.
+    # input_output_aliases donates the pool in place; safe because the COW
+    # call site always copies src -> freshly-allocated dst (never aliased).
+    _copy = KernelContract(index_space="block_table", donation_safe=True)
+    REGISTRY.register("copy_block", "pallas", kops.copy_block,
+                      contract=_copy)
+    REGISTRY.register("copy_block", "ref", copy_block_ref, contract=_copy)
     REGISTRY.register(
         "conv2d", "pallas", kops.conv2d_fused,
-        supports=lambda groups=1, **kw: groups == 1)
+        rejects=_conv2d_reject,
+        contract=KernelContract(
+            tile_key="conv2d",
+            static_reject=lambda attrs, cfg:
+                _conv2d_reject(groups=attrs.get("groups", 1))))
     REGISTRY.register("rg_lru", "pallas", lru_scan)
 
 

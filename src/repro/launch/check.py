@@ -1,0 +1,81 @@
+"""Static verification launcher — the CI gate over the shipped configs.
+
+Builds the default plan for each requested config (no jit, no allocation),
+runs :func:`repro.analysis.verify_plan` over it, and prints one summary line
+per config plus every diagnostic.  Exit status 1 when any config produces an
+error-severity diagnostic, so CI can gate on it.
+
+Usage:
+  python -m repro.launch.check --cfg lenet5
+  python -m repro.launch.check --all [--smoke] [--shape decode_32k]
+  python -m repro.launch.check --codes          # list the diagnostic codes
+"""
+import argparse
+import sys
+from typing import List, Optional, Tuple
+
+from repro.analysis import DIAGNOSTIC_CODES, verify_plan
+from repro.configs import ARCHS, CNNS, SHAPES, get_config, get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+
+
+def default_shape(family: str) -> ShapeConfig:
+    """A small CPU-checkable cell per family: CNNs get an image batch, LMs a
+    short decode cell (the serving-relevant kind)."""
+    if family == "cnn":
+        return ShapeConfig("check", "prefill", 64, 8)
+    return ShapeConfig("check", "decode", 128, 4)
+
+
+def check_config(name: str, *, smoke: bool = False,
+                 shape: Optional[ShapeConfig] = None,
+                 flow: Optional[FlowConfig] = None) -> Tuple[str, List[str]]:
+    """(summary_line, formatted diagnostics) for one config's default plan."""
+    from repro.core.plan import _build_plan
+    cfg = get_smoke(name) if smoke else get_config(name)
+    shape = shape if shape is not None else default_shape(cfg.family)
+    flow = flow if flow is not None else FlowConfig()
+    plan = _build_plan(cfg, flow, shape)
+    result = verify_plan(plan)
+    return result.summary_line(), [d.format() for d in result.diagnostics]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.check",
+        description="statically verify execution plans (no compilation)")
+    ap.add_argument("--cfg", "--arch", dest="cfg", default=None,
+                    help="one config name (see repro.configs)")
+    ap.add_argument("--all", action="store_true",
+                    help="verify every shipped config")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke configs")
+    ap.add_argument("--shape", default=None,
+                    help="shape-cell name from repro.configs.SHAPES "
+                         "(default: a small per-family check cell)")
+    ap.add_argument("--codes", action="store_true",
+                    help="print the diagnostic code table and exit")
+    args = ap.parse_args(argv)
+
+    if args.codes:
+        for code, meaning in DIAGNOSTIC_CODES.items():
+            print(f"{code}  {meaning}")
+        return 0
+
+    if not args.cfg and not args.all:
+        ap.error("pass --cfg NAME or --all")
+    names = ARCHS + CNNS if args.all else [args.cfg]
+    shape = SHAPES[args.shape] if args.shape else None
+
+    failed = False
+    for name in names:
+        summary, diags = check_config(name, smoke=args.smoke, shape=shape)
+        print(f"{name:24s} {summary}")
+        for line in diags:
+            print(f"    {line}")
+        failed = failed or summary.startswith("FAIL")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

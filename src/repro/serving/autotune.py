@@ -53,29 +53,21 @@ class ServingProfile:
         object.__setattr__(self, "block_sizes", tuple(self.block_sizes))
         object.__setattr__(self, "chunk_sizes", tuple(self.chunk_sizes))
         object.__setattr__(self, "fori_segs", tuple(self.fori_segs))
-        if not self.batch_buckets or \
-                tuple(sorted(self.batch_buckets)) != self.batch_buckets:
-            raise ValueError("batch_buckets must be ascending and non-empty")
-        if any(b < 1 for b in self.batch_buckets):
-            raise ValueError("batch_buckets must be positive")
+        # candidate-set invariants live once in repro.analysis.rules (shared
+        # with the static verifier); each raises with its legacy message
+        from repro.analysis import rules as _rules
+        msg0 = _rules.profile_batch_buckets(self.batch_buckets)
+        if msg0 is not None:
+            raise ValueError(msg0)
         if self.max_seq_len < 1:
             raise ValueError("max_seq_len must be >= 1")
-        if any(b < 1 or b > self.max_seq_len for b in self.block_sizes):
-            raise ValueError("block sizes must be in [1, max_seq_len]")
-        if any(self.max_seq_len % b for b in self.block_sizes):
-            raise ValueError(
-                "every candidate block size must divide max_seq_len "
-                "(EngineConfig requires whole-block prompt buckets); got "
-                f"{self.block_sizes} vs max_seq_len={self.max_seq_len}")
-        if not self.chunk_sizes or \
-                any(k < 1 or k > self.max_seq_len for k in self.chunk_sizes):
-            raise ValueError(
-                f"chunk sizes must be in [1, max_seq_len]; got "
-                f"{self.chunk_sizes}")
-        if any(s == 1 or s < 0 for s in self.fori_segs):
-            raise ValueError(
-                f"fori segment candidates must be 0 (off) or >= 2; got "
-                f"{self.fori_segs}")
+        for msg in (_rules.profile_block_sizes(self.block_sizes,
+                                               self.max_seq_len),
+                    _rules.profile_chunk_sizes(self.chunk_sizes,
+                                               self.max_seq_len),
+                    _rules.profile_fori_segs(self.fori_segs)):
+            if msg is not None:
+                raise ValueError(msg)
 
     def shape_for(self, bucket: int) -> ShapeConfig:
         return ShapeConfig(f"{self.name}_decode{self.max_seq_len}_b{bucket}",

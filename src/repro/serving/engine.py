@@ -114,40 +114,30 @@ class EngineConfig:
             raise ValueError("temperature must be >= 0")
         if not 0.0 <= self.prefix_cache_min_ratio <= 1.0:
             raise ValueError("prefix_cache_min_ratio must be in [0, 1]")
-        if not 1 <= self.chunk_size <= self.max_seq_len:
-            raise ValueError(
-                f"chunk_size must be in [1, max_seq_len="
-                f"{self.max_seq_len}], got {self.chunk_size}")
-        if self.fori_seg == 1 or self.fori_seg < 0:
-            raise ValueError(
-                f"fori_seg must be 0 (off) or >= 2, got {self.fori_seg}")
+        # the invariants below are shared with the static verifier
+        # (repro.analysis checkers S301-S306): each rule lives once in
+        # repro.analysis.rules and is raised here with its legacy message
+        from repro.analysis import rules as _rules
+
+        def _check(msg):
+            if msg is not None:
+                raise ValueError(msg)
+
+        _check(_rules.chunk_in_range(self.chunk_size, self.max_seq_len))
+        _check(_rules.fori_seg_valid(self.fori_seg))
         if self.chunk_buckets is None:
             self.chunk_buckets = (1,) if self.chunk_size == 1 \
                 else (1, self.chunk_size)
         else:
             self.chunk_buckets = tuple(sorted(set(
                 int(b) for b in self.chunk_buckets)))
-            if any(b < 1 for b in self.chunk_buckets):
-                raise ValueError("chunk buckets must be positive")
-            if self.chunk_buckets[0] != 1:
-                raise ValueError(
-                    "chunk_buckets must include rung 1 (plain decode "
-                    f"ticks), got {self.chunk_buckets}")
-            if self.chunk_buckets[-1] != self.chunk_size:
-                raise ValueError(
-                    f"chunk_buckets must end at chunk_size="
-                    f"{self.chunk_size}, got {self.chunk_buckets}")
+            _check(_rules.chunk_ladder(self.chunk_buckets, self.chunk_size))
         if self.batch_buckets is None:
             self.batch_buckets = _pow2_ladder(1, self.max_batch)
         else:
             self.batch_buckets = tuple(sorted(set(int(b)
                                                   for b in self.batch_buckets)))
-            if any(b < 1 for b in self.batch_buckets):
-                raise ValueError("batch buckets must be positive")
-            if self.batch_buckets[-1] != self.max_batch:
-                raise ValueError(
-                    f"batch_buckets must end at max_batch={self.max_batch}, "
-                    f"got {self.batch_buckets}")
+            _check(_rules.batch_ladder(self.batch_buckets, self.max_batch))
         if self.prompt_buckets is None:
             self.prompt_buckets = _pow2_ladder(
                 min(max(8, self.block_size), self.max_seq_len),
@@ -155,23 +145,16 @@ class EngineConfig:
         else:
             self.prompt_buckets = tuple(sorted(set(int(b)
                                                    for b in self.prompt_buckets)))
-            if any(b < 1 for b in self.prompt_buckets):
-                raise ValueError("prompt buckets must be positive")
-            if self.prompt_buckets[-1] > self.max_seq_len:
-                raise ValueError(
-                    f"prompt buckets exceed max_seq_len={self.max_seq_len}")
+            _check(_rules.prompt_ladder(self.prompt_buckets,
+                                        self.max_seq_len))
             if self.prompt_buckets[-1] < self.max_seq_len:
                 self.prompt_buckets += (self.max_seq_len,)
         # the paged pool packs prompt K/V block-by-block and the prefix
         # index hashes block-aligned runs: every prompt-bucket rung (and
         # hence max_seq_len, the final rung) must be a whole number of
         # blocks, not just the envelope
-        bad = [b for b in self.prompt_buckets if b % self.block_size]
-        if bad:
-            raise ValueError(
-                f"block_size={self.block_size} must divide every prompt "
-                f"bucket; offending rungs {bad} (of "
-                f"{list(self.prompt_buckets)})")
+        _check(_rules.block_divides_buckets(self.block_size,
+                                            self.prompt_buckets))
 
     @property
     def blocks_per_slot(self) -> int:

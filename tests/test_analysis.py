@@ -1,0 +1,358 @@
+"""Static verifier tests (repro.analysis).
+
+Three layers:
+* a negative case per diagnostic code — each mutation makes its code fire
+  exactly once (the codes are the machine interface, so they are pinned);
+* a golden sweep — every shipped config verifies clean at its default
+  check shape;
+* the DSE wiring — static pruning strictly reduces compiled candidates
+  while the winning plan stays byte-identical.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import pytest
+
+from repro import flow as rflow
+from repro.analysis import (DIAGNOSTIC_CODES, PlanVerificationError,
+                            verify_engine_config, verify_pipeline,
+                            verify_plan)
+from repro.analysis.checkers import static_flow_diagnostics
+from repro.configs import ARCHS, CNNS, get_config, get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+from repro.core.passmanager import PassManager
+from repro.core.passes import default_passes
+from repro.core.passes.fusion import FusionPass
+from repro.core.plan import _build_plan
+from repro.kernels.registry import REGISTRY, KernelContract
+from repro.serving.engine import EngineConfig
+
+DECODE = ShapeConfig("an_decode", "decode", 128, 4)
+CNN_SHAPE = ShapeConfig("an_cnn", "prefill", 64, 8)
+
+
+@pytest.fixture(scope="module")
+def lm_plan():
+    return _build_plan(get_smoke("llama3.2-1b"), FlowConfig(), DECODE)
+
+
+@pytest.fixture(scope="module")
+def cnn_plan():
+    return _build_plan(get_config("lenet5"), FlowConfig(), CNN_SHAPE)
+
+
+def _mutated(plan, **over):
+    p = dataclasses.replace(plan)
+    for k, v in over.items():
+        setattr(p, k, v)
+    return p
+
+
+def _fires_once(result, code):
+    codes = list(result.codes())
+    assert codes.count(code) == 1, (code, result.describe())
+    return [d for d in result.diagnostics if d.code == code][0]
+
+
+# ---------------------------------------------------------------------------
+# negative cases — cross-pass contracts (X)
+# ---------------------------------------------------------------------------
+
+def test_x001_units_must_partition_blocks(lm_plan):
+    res = verify_plan(_mutated(lm_plan, units=lm_plan.units[:-1]))
+    d = _fires_once(res, "X001")
+    assert d.severity == "error" and not res.ok
+
+
+def test_x002_tile_must_divide_problem_dim(lm_plan):
+    tiles = dict(lm_plan.tiles)
+    bm, bk, bn = tiles["matmul"]
+    tiles["matmul"] = (3, bk, bn)       # decode m = max(1, 8) = 8; 8 % 3 != 0
+    res = verify_plan(_mutated(lm_plan, tiles=tiles))
+    _fires_once(res, "X002")
+
+
+def test_x003_stream_stage_bounds(lm_plan):
+    bad = dataclasses.replace(lm_plan.stream, stage_boundaries=(5, 2))
+    res = verify_plan(_mutated(lm_plan, stream=bad))
+    _fires_once(res, "X003")
+
+
+def test_x004_shard_axes_must_divide(lm_plan):
+    from repro.analysis.checkers import _iter_param_shapes
+    key, shape = next(iter(_iter_param_shapes(lm_plan)))
+    sp = SimpleNamespace(axis_sizes={"data": 7},
+                         param_specs={key: (("data",),) +
+                                      (None,) * (len(shape) - 1)})
+    assert shape[0] % 7 != 0            # param dims are powers of two here
+    res = verify_plan(_mutated(lm_plan, sharding=sp))
+    _fires_once(res, "X004")
+
+
+def test_x005_unknown_mesh_axis(lm_plan):
+    from repro.analysis.checkers import _iter_param_shapes
+    key, _ = next(iter(_iter_param_shapes(lm_plan)))
+    sp = SimpleNamespace(axis_sizes={}, param_specs={key: ("ghost",)})
+    res = verify_plan(_mutated(lm_plan, sharding=sp))
+    _fires_once(res, "X005")
+
+
+def test_x006_unknown_op_in_kernel_table(lm_plan):
+    res = verify_plan(_mutated(lm_plan,
+                               kernels={**lm_plan.kernels, "bogus_op": "ref"}))
+    _fires_once(res, "X006")
+
+
+def test_x007_invalid_graph(lm_plan):
+    class _BadGraph:
+        def __init__(self, blocks):
+            self.blocks = blocks
+
+        def validate(self):
+            raise AssertionError("op reads undefined value %x0")
+
+    res = verify_plan(_mutated(lm_plan, graph=_BadGraph(lm_plan.graph.blocks)))
+    _fires_once(res, "X007")
+
+
+def test_x008_unconsumed_tile_key(lm_plan):
+    res = verify_plan(_mutated(lm_plan,
+                               tiles={**lm_plan.tiles, "mystery": (8, 8)}))
+    _fires_once(res, "X008")
+
+
+# ---------------------------------------------------------------------------
+# negative cases — pipeline ordering (P)
+# ---------------------------------------------------------------------------
+
+def test_p101_reader_before_writer():
+    res = verify_pipeline(PassManager([FusionPass()]))  # reads graph unwritten
+    _fires_once(res, "P101")
+
+
+def test_p102_required_artifact_never_written():
+    passes = [p for p in default_passes() if p.name != "tiling"]
+    res = verify_pipeline(PassManager(passes))
+    d = _fires_once(res, "P102")
+    assert d.op == "tiles"
+
+
+def test_default_pipeline_orders_clean():
+    assert verify_pipeline(PassManager.default_pipeline()).ok
+
+
+# ---------------------------------------------------------------------------
+# negative cases — kernel contracts (K)
+# ---------------------------------------------------------------------------
+
+def test_k201_backend_without_impl(lm_plan):
+    res = verify_plan(_mutated(lm_plan,
+                               kernels={**lm_plan.kernels, "norm": "pallas"}))
+    _fires_once(res, "K201")
+
+
+def test_k202_workingset_exceeds_vmem_budget(lm_plan):
+    plan = _mutated(
+        lm_plan,
+        kernels={**lm_plan.kernels, "matmul": "pallas"},
+        flow=dataclasses.replace(lm_plan.flow, vmem_budget_bytes=64))
+    res = verify_plan(plan)
+    _fires_once(res, "K202")
+
+
+def test_k203_donation_unsafe_kernel(lm_plan):
+    REGISTRY.register("unsafe_probe_op", "pallas", lambda: None,
+                      contract=KernelContract(donation_safe=False))
+    try:
+        assert lm_plan.cache.donate_state
+        res = verify_plan(_mutated(
+            lm_plan,
+            kernels={**lm_plan.kernels, "unsafe_probe_op": "pallas"}))
+        _fires_once(res, "K203")
+    finally:
+        del REGISTRY._impls[("unsafe_probe_op", "pallas")]
+
+
+def test_k204_static_capability_fallback_warns():
+    # whisper's decoder cross-attends: the flash kernel statically rejects
+    # those ops, so a pallas resolution silently falls back at dispatch
+    plan = _build_plan(get_smoke("whisper-small"), FlowConfig(),
+                       ShapeConfig("an_wsp", "prefill", 32, 2))
+    plan = _mutated(plan, kernels={**plan.kernels, "attention": "pallas"})
+    res = verify_plan(plan)
+    d = _fires_once(res, "K204")
+    assert d.severity == "warning"
+    assert res.ok                       # warnings do not fail verification
+    assert "cross-attention" in d.message
+
+
+def test_k205_pool_smaller_than_one_slot(lm_plan):
+    ecfg = EngineConfig(max_seq_len=64, block_size=16, num_blocks=3)
+    res = verify_engine_config(lm_plan, ecfg)   # blocks_per_slot=4, need 5
+    _fires_once(res, "K205")
+
+
+# ---------------------------------------------------------------------------
+# negative cases — serving invariants (S)
+# ---------------------------------------------------------------------------
+
+def _ecfg(**kw):
+    return EngineConfig(**kw)
+
+
+def test_s301_block_must_divide_prompt_buckets(lm_plan):
+    ecfg = _ecfg()
+    ecfg.prompt_buckets = (ecfg.block_size + 1, ecfg.max_seq_len)
+    res = verify_engine_config(lm_plan, ecfg)
+    _fires_once(res, "S301")
+
+
+def test_s302_chunk_ladder_needs_rung_one(lm_plan):
+    ecfg = _ecfg(chunk_size=4, chunk_buckets=(1, 4))
+    ecfg.chunk_buckets = (2, 4)
+    res = verify_engine_config(lm_plan, ecfg)
+    _fires_once(res, "S302")
+
+
+def test_s303_fori_seg_one_invalid(lm_plan):
+    ecfg = _ecfg()
+    ecfg.fori_seg = 1
+    res = verify_engine_config(lm_plan, ecfg)
+    _fires_once(res, "S303")
+
+
+def test_s304_batch_ladder_must_end_at_max_batch(lm_plan):
+    ecfg = _ecfg()
+    ecfg.batch_buckets = (ecfg.max_batch + 1,)
+    res = verify_engine_config(lm_plan, ecfg)
+    _fires_once(res, "S304")
+
+
+def test_s305_prompt_buckets_exceed_envelope(lm_plan):
+    ecfg = _ecfg()
+    ecfg.prompt_buckets = (ecfg.max_seq_len * 2,)
+    res = verify_engine_config(lm_plan, ecfg)
+    _fires_once(res, "S305")
+
+
+def test_s306_chunk_size_out_of_range(lm_plan):
+    ecfg = _ecfg(chunk_size=4, chunk_buckets=(1, 4))
+    ecfg.chunk_size = ecfg.max_seq_len * 2
+    ecfg.chunk_buckets = (1, ecfg.chunk_size)
+    res = verify_engine_config(lm_plan, ecfg)
+    _fires_once(res, "S306")
+
+
+# ---------------------------------------------------------------------------
+# negative cases — mesh-split divisibility (M, warnings)
+# ---------------------------------------------------------------------------
+
+def test_m401_batch_not_divisible_by_dp(lm_plan):
+    plan = _mutated(lm_plan, flow=dataclasses.replace(
+        lm_plan.flow, mesh_split=(("data", 3),)))   # batch 4 % 3 != 0
+    res = verify_plan(plan)
+    d = _fires_once(res, "M401")
+    assert d.severity == "warning" and res.ok
+
+
+def test_m402_tp_idles_for_cnn(cnn_plan):
+    plan = _mutated(cnn_plan, flow=dataclasses.replace(
+        cnn_plan.flow, mesh_split=(("model", 2),)))
+    res = verify_plan(plan)
+    _fires_once(res, "M402")
+
+
+def test_m403_pp_outside_lm_train(lm_plan):
+    plan = _mutated(lm_plan, flow=dataclasses.replace(
+        lm_plan.flow, pp_axis="pod", mesh_split=(("pod", 2),)))
+    res = verify_plan(plan)
+    _fires_once(res, "M403")
+
+
+# ---------------------------------------------------------------------------
+# negative cases — flow-knob screen (F)
+# ---------------------------------------------------------------------------
+
+def test_f501_bogus_flow_knob(lm_plan):
+    diags = static_flow_diagnostics(
+        lm_plan.cfg, lm_plan.shape,
+        dataclasses.replace(lm_plan.flow, kernel_backend="bogus"))
+    assert [d.code for d in diags] == ["F501"]
+
+
+def test_every_code_has_a_negative_case():
+    """The table above must stay in lockstep with DIAGNOSTIC_CODES."""
+    import inspect
+    import sys
+    src = inspect.getsource(sys.modules[__name__])
+    for code in DIAGNOSTIC_CODES:
+        assert f'"{code}"' in src or f"_{code.lower()}_" in src, code
+
+
+# ---------------------------------------------------------------------------
+# golden sweep — every shipped config verifies clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ARCHS + CNNS)
+def test_shipped_configs_verify_clean(name):
+    from repro.launch.check import check_config
+    summary, diags = check_config(name)
+    assert summary.startswith("ok"), (name, summary, diags)
+    assert diags == []
+
+
+def test_compile_verify_records_result():
+    cm = rflow.compile("llama3.2-1b", DECODE, smoke=True, verify=True)
+    assert cm.plan.verification is not None and cm.plan.verification.ok
+    assert "verify: ok" in cm.plan.describe()
+
+
+def test_compile_verify_gates_before_jit():
+    flow = FlowConfig(kernel_backend="pallas", vmem_budget_bytes=1)
+    with pytest.raises(PlanVerificationError) as ei:
+        rflow.compile("llama3.2-1b", DECODE, flow, smoke=True, verify=True)
+    assert "K202" in str(ei.value)
+    assert not ei.value.result.ok
+
+
+def test_unverified_describe_has_no_verify_line(lm_plan):
+    assert "verify:" not in lm_plan.describe()
+
+
+# ---------------------------------------------------------------------------
+# DSE static pruning
+# ---------------------------------------------------------------------------
+
+def test_dse_static_pruning_skips_compiles_keeps_winner():
+    from repro.core import dse
+    cfg = get_smoke("llama3.2-1b")
+    flow0 = FlowConfig(mode="folded")
+    calls = []
+
+    def validator(flow):
+        calls.append(flow)
+        return {"per_device_bytes": 1}
+
+    er = dse.explore(cfg, DECODE, flow0, validator=validator,
+                     space={"kernel_backend": ("auto", "bogus")},
+                     use_cache=False)
+    assert er.n_enumerated == 2
+    assert er.n_static_pruned == 1          # 'bogus' never built nor compiled
+    assert "static_pruned=1" in er.describe()
+    n_bad = len(calls)
+    calls.clear()
+
+    er2 = dse.explore(cfg, DECODE, flow0, validator=validator,
+                      space={"kernel_backend": ("auto",)}, use_cache=False)
+    assert er2.n_static_pruned == 0
+    assert len(calls) == n_bad == 1         # pruning saved the extra compile
+    assert er.best.flow == er2.best.flow
+    assert er.plan.describe() == er2.plan.describe()
+
+
+def test_dse_all_candidates_statically_invalid_raises():
+    from repro.core import dse
+    cfg = get_smoke("llama3.2-1b")
+    with pytest.raises(ValueError, match="static flow screen"):
+        dse.explore(cfg, DECODE, FlowConfig(mode="folded"),
+                    space={"kernel_backend": ("bogus",)}, use_cache=False)
