@@ -20,10 +20,11 @@ REPO = os.path.join(os.path.dirname(__file__), "..")
 
 
 def serving_tables(T, concurrencies=(1, 4, 16)) -> dict:
-    """Table 9 + the mixed-traffic chunked/fori A/B, as one JSON payload."""
+    """Table 9 + the mixed-traffic and speculation A/Bs, as one payload."""
     table9 = T.table9_serving(concurrencies)
     mixed = T.table9_mixed_traffic()
-    return {"table9": table9, "mixed_traffic": mixed}
+    spec = T.table9_speculation()
+    return {"table9": table9, "mixed_traffic": mixed, "speculation": spec}
 
 
 def print_serving(doc: dict) -> None:
@@ -50,6 +51,22 @@ def print_serving(doc: dict) -> None:
     print(f"table9/mixed/verdict,0,"
           f"p95_ttft_improved={mt['p95_ttft_improved']};"
           f"host_syncs_reduced={mt['host_syncs_reduced']}")
+    sp = doc["speculation"]
+    for label in ("baseline", "speculative"):
+        r = sp[label]
+        extra = (f";acceptance_rate={r['acceptance_rate']:.2f};"
+                 f"drafted={r['spec_tokens_drafted']};"
+                 f"accepted={r['spec_tokens_accepted']};"
+                 f"rolled_back={r['spec_rollback_tokens']}"
+                 if label == "speculative" else "")
+        print(f"table9/{r['name']},{r['p50_latency_s'] * 1e6:.0f},"
+              f"tok_per_s={r['tokens_per_s']:.1f};"
+              f"p50_ms={r['p50_latency_s'] * 1e3:.1f};"
+              f"syncs_per_tok={r['host_syncs_per_token']:.3f}{extra}")
+    print(f"table9/spec/verdict,0,"
+          f"tokens_match={sp['tokens_match']};"
+          f"speedup={sp['speedup']:.2f}x;"
+          f"target={sp['target']:.1f}x;target_met={sp['target_met']}")
 
 
 def main(argv=None) -> None:

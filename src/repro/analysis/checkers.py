@@ -267,11 +267,12 @@ def check_mesh(plan: Any, ecfg: Any = None) -> Iterator[Diagnostic]:
 
 
 def check_serving(plan: Any, ecfg: Any = None) -> Iterator[Diagnostic]:
-    """S301–S306/K205 — the EngineConfig envelope against the shared rules
+    """S301–S307/K205 — the EngineConfig envelope against the shared rules
     (only when an engine config is being verified alongside the plan)."""
     if ecfg is None:
         return
     where = "serving"
+    sp = getattr(ecfg, "speculation", None)
     for code, msg in (
             ("S306", rules.chunk_in_range(ecfg.chunk_size, ecfg.max_seq_len)),
             ("S303", rules.fori_seg_valid(ecfg.fori_seg)),
@@ -281,6 +282,9 @@ def check_serving(plan: Any, ecfg: Any = None) -> Iterator[Diagnostic]:
                                          ecfg.max_seq_len)),
             ("S301", rules.block_divides_buckets(ecfg.block_size,
                                                  ecfg.prompt_buckets)),
+            ("S307", rules.speculation_valid(
+                sp.kind, sp.draft_k, sp.draft_cfg, ecfg.max_seq_len,
+                ecfg.fori_seg) if sp is not None else None),
     ):
         if msg is not None:
             yield Diagnostic(code, ERROR, msg, where=where)

@@ -44,6 +44,8 @@ DIAGNOSTIC_CODES: Dict[str, str] = {
     "S304": "batch-bucket ladder malformed (positive / ends at max_batch)",
     "S305": "prompt-bucket ladder malformed (positive / within max_seq_len)",
     "S306": "chunk_size outside [1, max_seq_len]",
+    "S307": "speculation config invalid (drafter kind / draft_k / "
+            "draft cfg / fori_seg clash)",
     # mesh-split divisibility (M) — shared with split_rejection_reason
     "M401": "global batch not divisible by the dp factor",
     "M402": "tp factor divides none of the tp-shardable dims",

@@ -80,6 +80,31 @@ def block_divides_buckets(block_size: int,
     return None
 
 
+def speculation_valid(kind: str, draft_k: int, draft_cfg: Any,
+                      max_seq_len: int, fori_seg: int) -> Optional[str]:
+    """The EngineConfig.speculation envelope: a known drafter kind, a
+    verify cell that fits the sequence envelope, a named draft config when
+    the drafter is a model, and no fori segments (acceptance is decided on
+    the host every tick, so a host-free segment can never carry a
+    speculative slot)."""
+    kinds = ("ngram", "draft", "null")
+    if kind not in kinds:
+        return (f"speculation drafter kind must be one of {kinds}, "
+                f"got {kind!r}")
+    if draft_k < 1:
+        return f"speculation draft_k must be >= 1, got {draft_k}"
+    if draft_k + 1 > max_seq_len:
+        return (f"speculation draft_k={draft_k} needs a (B, {draft_k + 1}) "
+                f"verify cell, beyond max_seq_len={max_seq_len}")
+    if kind == "draft" and not draft_cfg:
+        return ("speculation kind 'draft' needs a draft model config name "
+                "(draft:<cfg>:<k>)")
+    if fori_seg:
+        return (f"speculation and fori_seg={fori_seg} are mutually "
+                "exclusive: acceptance is decided on the host every tick")
+    return None
+
+
 def pool_admits_full_slot(num_blocks: Optional[int],
                           blocks_per_slot: int) -> Optional[str]:
     """Scalar-prefetch bounds for the paged decode kernel: the block-table
@@ -136,6 +161,16 @@ def profile_fori_segs(fori_segs: Sequence[int]) -> Optional[str]:
     if any(s == 1 or s < 0 for s in segs):
         return (f"fori segment candidates must be 0 (off) or >= 2; got "
                 f"{segs}")
+    return None
+
+
+def profile_spec_ks(spec_ks: Sequence[int],
+                    max_seq_len: int) -> Optional[str]:
+    ks = tuple(spec_ks)
+    if not ks or any(k < 0 or k + 1 > max_seq_len for k in ks):
+        return ("speculation draft_k candidates must be 0 (off) or fit a "
+                f"(B, k+1) verify cell within max_seq_len={max_seq_len}; "
+                f"got {ks}")
     return None
 
 

@@ -33,6 +33,8 @@ from repro.serving import (Engine, EngineConfig, load_requests_jsonl,
 
 
 def _run_replay(args) -> None:
+    spec = None if args.speculation in (None, "off", "none", "") \
+        else args.speculation
     ecfg = EngineConfig(temperature=args.temperature,
                         max_batch=args.max_batch,
                         max_seq_len=args.max_seq_len,
@@ -40,7 +42,8 @@ def _run_replay(args) -> None:
                         prefix_cache=bool(args.prefix_cache),
                         chunk_size=args.chunk_size,
                         chunked_prefill=args.chunked_prefill,
-                        fori_seg=args.fori_seg)
+                        fori_seg=args.fori_seg,
+                        speculation=spec)
     if args.serving_autotune:
         from repro.serving.autotune import ServingProfile, autotune_decode
         prof = ServingProfile(name="cli",
@@ -60,7 +63,8 @@ def _run_replay(args) -> None:
             # explicit CLI chunk/fori knobs likewise override the tuned ones
             **({"chunk_size": args.chunk_size,
                 "chunked_prefill": True} if args.chunked_prefill else {}),
-            **({"fori_seg": args.fori_seg} if args.fori_seg else {}))
+            **({"fori_seg": args.fori_seg} if args.fori_seg else {}),
+            **({"speculation": spec, "fori_seg": 0} if spec else {}))
     else:
         shape = ShapeConfig("serve", "decode", args.max_seq_len,
                             args.max_batch)
@@ -83,6 +87,12 @@ def _run_replay(args) -> None:
               f"({m['prefix_hits']} of {m['n_requests']} requests seeded; "
               f"{m['prefill_tokens_computed']} of {m['prompt_tokens_total']} "
               f"prompt tokens computed)")
+    if m["speculation"]:
+        print(f"speculation [{m['spec_drafter']}]: acceptance rate "
+              f"{m['spec_acceptance_rate'] * 100:.1f}% "
+              f"({m['spec_tokens_accepted']} of {m['spec_tokens_drafted']} "
+              f"draft tokens accepted over {m['spec_ticks']} verify ticks; "
+              f"{m['spec_rollback_tokens']} rolled back)")
     for r in report.results[: args.show]:
         print(f"  {r.rid}: prompt={r.prompt_len} -> {r.tokens} "
               f"({r.finish_reason}, {r.latency_s * 1e3:.0f}ms)")
@@ -132,6 +142,12 @@ def main():
                     help="host-free decode: run this many steady-state "
                          "decode ticks as one on-device fori_loop segment "
                          "(0 = per-tick host loop; replay mode)")
+    ap.add_argument("--speculation", default="off",
+                    help="speculative decoding: ngram:<k> (prompt-lookup "
+                         "drafter), draft:<cfg>:<k> (small-model drafter), "
+                         "null:<k>, or off.  Exact — greedy output is "
+                         "byte-identical to the per-token loop; the replay "
+                         "report prints the acceptance rate (replay mode)")
     ap.add_argument("--serving-autotune", action="store_true",
                     help="search the decode-cell flow space per batch "
                          "bucket and pin the winner before replay")

@@ -7,6 +7,8 @@
   tables, prefill packing, the refcounting ledger behind prefix caching).
 * :mod:`repro.serving.prefix` — content-hashed prefix index (shared prompt
   blocks, copy-on-write seeds for new requests).
+* :mod:`repro.serving.speculation` — speculative decoding: drafters, the
+  batched verify cell's target sampling, draft->verify->rollback config.
 * :mod:`repro.serving.autotune` — engine-level decode autotune over the DSE.
 """
 from repro.serving.engine import Engine, EngineConfig, RunReport
@@ -17,9 +19,15 @@ from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      load_requests_jsonl,
                                      shared_prefix_requests,
                                      synthetic_requests)
+from repro.serving.speculation import (Drafter, DraftModelDrafter,
+                                       NGramDrafter, NullDrafter,
+                                       SpeculationConfig, build_drafter,
+                                       sample_targets)
 
 __all__ = ["Engine", "EngineConfig", "RunReport", "BlockLedger", "BlockPool",
            "PagedKVCache", "PrefixIndex", "PrefixMatch", "Request",
            "RequestResult", "Scheduler", "block_hashes",
            "load_requests_jsonl", "shared_prefix_requests",
-           "synthetic_requests"]
+           "synthetic_requests", "Drafter", "DraftModelDrafter",
+           "NGramDrafter", "NullDrafter", "SpeculationConfig",
+           "build_drafter", "sample_targets"]

@@ -46,6 +46,9 @@ class ServingProfile:
     chunk_sizes: Tuple[int, ...] = (1, 2, 4)
     # host-free decode segment lengths to A/B (0 = per-tick host loop)
     fori_segs: Tuple[int, ...] = (0, 4, 8)
+    # speculative draft_k candidates to A/B with the n-gram drafter
+    # (0 = speculation off)
+    spec_ks: Tuple[int, ...] = (0, 2, 4)
 
     def __post_init__(self):
         # frozen dataclass: normalize sequence inputs via object.__setattr__
@@ -53,6 +56,7 @@ class ServingProfile:
         object.__setattr__(self, "block_sizes", tuple(self.block_sizes))
         object.__setattr__(self, "chunk_sizes", tuple(self.chunk_sizes))
         object.__setattr__(self, "fori_segs", tuple(self.fori_segs))
+        object.__setattr__(self, "spec_ks", tuple(self.spec_ks))
         # candidate-set invariants live once in repro.analysis.rules (shared
         # with the static verifier); each raises with its legacy message
         from repro.analysis import rules as _rules
@@ -65,7 +69,8 @@ class ServingProfile:
                                                self.max_seq_len),
                     _rules.profile_chunk_sizes(self.chunk_sizes,
                                                self.max_seq_len),
-                    _rules.profile_fori_segs(self.fori_segs)):
+                    _rules.profile_fori_segs(self.fori_segs),
+                    _rules.profile_spec_ks(self.spec_ks, self.max_seq_len)):
             if msg is not None:
                 raise ValueError(msg)
 
@@ -91,6 +96,8 @@ class DecodeAutotune:
     chunk_times_us: Dict[int, float] = field(default_factory=dict)
     fori_seg: int = 0
     fori_times_s: Dict[str, float] = field(default_factory=dict)
+    speculation: Optional[str] = None    # e.g. "ngram:4"; None = off
+    spec_times_s: Dict[str, float] = field(default_factory=dict)
 
     def _measured_per_token(self, bucket: int) -> Optional[float]:
         er = self.per_bucket[bucket]
@@ -141,6 +148,9 @@ class DecodeAutotune:
             chunk_size=self.chunk_size,
             chunked_prefill=self.chunk_size > 1,
             fori_seg=self.fori_seg)
+        if self.speculation:
+            kw["speculation"] = self.speculation
+            kw["fori_seg"] = 0       # S307: the host decides acceptance
         kw.update(overrides)
         return EngineConfig(**kw)
 
@@ -158,7 +168,8 @@ class DecodeAutotune:
                  f"buckets={list(self.profile.batch_buckets)} "
                  f"pin=b{self.best_bucket} block_size={self.block_size} "
                  f"prefix_cache={'on' if self.prefix_cache else 'off'} "
-                 f"chunk={self.chunk_size} fori_seg={self.fori_seg or 'off'}"]
+                 f"chunk={self.chunk_size} fori_seg={self.fori_seg or 'off'} "
+                 f"spec={self.speculation or 'off'}"]
         for b in self.profile.batch_buckets:
             er = self.per_bucket[b]
             t = self._measured_per_token(b)
@@ -178,6 +189,9 @@ class DecodeAutotune:
             lines.append("  fori_replay_s: " + " ".join(
                 f"{k}:{v:.3f}" for k, v in sorted(
                     self.fori_times_s.items(), key=lambda kv: int(kv[0]))))
+        if self.spec_times_s:
+            lines.append("  spec_replay_s: " + " ".join(
+                f"{k}:{v:.3f}" for k, v in sorted(self.spec_times_s.items())))
         return "\n".join(lines)
 
 
@@ -372,6 +386,61 @@ def tune_prefix_cache(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
     return times["on"] <= times["off"], times
 
 
+def tune_speculation(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
+                     ) -> Tuple[Optional[str], Dict[str, float]]:
+    """Measured A/B of speculative decoding on a decode-heavy shared-prefix
+    replay (the prompt-lookup drafter's home turf: generations revisit the
+    shared context): serve the same batch once per candidate ``draft_k``
+    (0 = off, which keeps the already-tuned fori_seg) through a pinned
+    Engine and keep the fastest.  Ties break toward the *larger* k — equal
+    wall time with fewer host syncs per token.  Returns the winning
+    ``"ngram:<k>"`` spec (or ``None``) plus the replay times.  Models whose
+    per-request state is not fully paged report off with no measurement."""
+    from repro.serving.engine import Engine
+    from repro.serving.kvcache import _state_entries
+    from repro.serving.scheduler import shared_prefix_requests
+    prof = at.profile
+    bs = at.block_size
+    ks = sorted({0, *prof.spec_ks})
+    max_k = max(ks)
+    if max_k == 0:
+        return None, {}
+    prefix_len = max(bs, prof.max_seq_len // 4 // bs * bs)
+    tail_len = bs
+    prompt_len = prefix_len + tail_len
+    max_new = prof.max_seq_len - prompt_len
+    if max_new < max_k + 1:
+        return None, {}           # envelope too small for any verify cell
+    cm = at.compile()
+    if any(not e.paged for e in _state_entries(cm.plan)):
+        # rollback truncates block chains; recurrent state can't express it
+        return None, {}
+    params = cm.init_params(jax.random.key(seed))
+    n = max(4, 2 * prof.batch_buckets[-1])
+    reqs = shared_prefix_requests(n, at.cfg.vocab_size,
+                                  prefix_len=prefix_len, tail_len=tail_len,
+                                  max_new_tokens=max_new, seed=seed)
+    buckets = tuple(sorted({prompt_len, prof.max_seq_len}))
+
+    def label(k):
+        return f"ngram:{k}" if k else "off"
+
+    times: Dict[str, float] = {}
+    for k in ks:
+        kw = {"speculation": f"ngram:{k}", "fori_seg": 0} if k else {}
+        eng = Engine(cm, params,
+                     at.engine_config(prompt_buckets=buckets, **kw))
+        eng.run(reqs)                         # warm the tick programs
+        ts = []
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            ts.append(time.perf_counter() - t0)
+        times[label(k)] = float(np.median(ts))
+    best = min(sorted(ks, reverse=True), key=lambda k: times[label(k)])
+    return (f"ngram:{best}" if best else None), times
+
+
 def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
                     base_flow: Optional[FlowConfig] = None,
                     mesh=None,
@@ -382,6 +451,7 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
                     tune_prefix: Optional[bool] = None,
                     tune_chunks: bool = True,
                     tune_fori: Optional[bool] = None,
+                    tune_spec: Optional[bool] = None,
                     use_cache: bool = True) -> DecodeAutotune:
     """Search the flow design space for each decode cell of the serving
     profile and return the pinnable result.
@@ -399,7 +469,9 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
     ``k`` (adopted only when the model's per-request state is fully paged —
     the Engine's own gate); ``tune_fori`` A/Bs the host-free decode segment
     length on a decode-heavy replay (default: only under
-    ``validate="measure"``, like ``tune_prefix``)."""
+    ``validate="measure"``, like ``tune_prefix``); ``tune_spec`` A/Bs
+    speculative decoding (n-gram drafter, the profile's ``spec_ks``) on a
+    shared-prefix replay under the same default."""
     from repro.flow import _resolve_cfg
     if validate not in ("measure", "compile", "none"):
         raise ValueError(f"unknown validate mode {validate!r}")
@@ -455,4 +527,7 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
     do_fori = tune_fori if tune_fori is not None else validate == "measure"
     if do_fori:
         at.fori_seg, at.fori_times_s = tune_fori_seg(at, iters=iters)
+    do_spec = tune_spec if tune_spec is not None else validate == "measure"
+    if do_spec and cfg.attention is not None:
+        at.speculation, at.spec_times_s = tune_speculation(at, iters=iters)
     return at

@@ -54,6 +54,7 @@ from repro.serving.kvcache import (PagedKVCache, blocks_for_tokens,
                                    merge_state, slice_state)
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      bucket_for)
+from repro.serving.speculation import sample_targets
 
 
 def _pow2_ladder(lo: int, hi: int) -> Tuple[int, ...]:
@@ -99,6 +100,16 @@ class EngineConfig:
     # fori_loop (sampling in-loop) when no scheduling event can occur
     # within the segment; 0 disables
     fori_seg: int = 0
+    # speculative decoding: a drafter proposes up to draft_k continuation
+    # tokens per slot per tick; the engine verifies them in one
+    # (B, draft_k+1) cell, commits the accepted prefix plus one target
+    # token, and rolls the rest back through the ledger.  Exact: greedy
+    # output is byte-identical to the 1-token loop, sampled output is
+    # drafter-invariant (per-request rng streams).  Accepts a
+    # SpeculationConfig or a spec string ("ngram:4" | "draft:<cfg>:4" |
+    # "null:2" | "off"); None disables.  Mutually exclusive with fori_seg
+    # (S307): acceptance is decided on the host every tick.
+    speculation: Optional[Any] = None
     # debugging/parity: keep the sampled-step logits on each RequestResult
     capture_logits: bool = False
 
@@ -115,7 +126,7 @@ class EngineConfig:
         if not 0.0 <= self.prefix_cache_min_ratio <= 1.0:
             raise ValueError("prefix_cache_min_ratio must be in [0, 1]")
         # the invariants below are shared with the static verifier
-        # (repro.analysis checkers S301-S306): each rule lives once in
+        # (repro.analysis checkers S301-S307): each rule lives once in
         # repro.analysis.rules and is raised here with its legacy message
         from repro.analysis import rules as _rules
 
@@ -125,6 +136,13 @@ class EngineConfig:
 
         _check(_rules.chunk_in_range(self.chunk_size, self.max_seq_len))
         _check(_rules.fori_seg_valid(self.fori_seg))
+        if isinstance(self.speculation, str):
+            from repro.serving.speculation import SpeculationConfig
+            self.speculation = SpeculationConfig.parse(self.speculation)
+        if self.speculation is not None:
+            sp = self.speculation
+            _check(_rules.speculation_valid(sp.kind, sp.draft_k, sp.draft_cfg,
+                                            self.max_seq_len, self.fori_seg))
         if self.chunk_buckets is None:
             self.chunk_buckets = (1,) if self.chunk_size == 1 \
                 else (1, self.chunk_size)
@@ -159,6 +177,16 @@ class EngineConfig:
     @property
     def blocks_per_slot(self) -> int:
         return blocks_for_tokens(self.max_seq_len, self.block_size)
+
+    @property
+    def tick_buckets(self) -> Tuple[int, ...]:
+        """Per-tick column ladder for step 2b: the chunk ladder, plus the
+        ``draft_k + 1`` verify-cell rung when speculation is on (spec rows
+        and catch-up rows bucket through the same jitted (B, k) cells)."""
+        if self.speculation is None:
+            return self.chunk_buckets
+        return tuple(sorted({*self.chunk_buckets, 1,
+                             self.speculation.draft_k + 1}))
 
 
 @dataclass
@@ -200,6 +228,15 @@ class RunReport:
                 f"cow_forks={m['cow_forks']} "
                 f"cache_evictions={m['prefix_cache_evictions']} "
                 f"prefill_computed={m['prefill_tokens_computed']}")
+        if m.get("speculation"):
+            out += (
+                f"\n  speculation: {m['spec_drafter']} "
+                f"accepted={m['spec_tokens_accepted']}/"
+                f"{m['spec_tokens_drafted']} "
+                f"({m['spec_acceptance_rate'] * 100:.1f}%) "
+                f"spec_ticks={m['spec_ticks']} "
+                f"rolled_back={m['spec_rollback_tokens']} "
+                f"fork_undos={m['spec_fork_undos']}")
         return out
 
 
@@ -218,6 +255,13 @@ class Engine:
         self.ecfg = ecfg if ecfg is not None else EngineConfig()
         self.mesh = compiled.mesh
         self.last_report: Optional[RunReport] = None
+        self.last_cache: Optional[PagedKVCache] = None
+        # speculative decoding: the drafter is built lazily on first use (a
+        # draft-model drafter compiles a second cell) and cached across
+        # run() calls; drafter_override lets tests inject a custom Drafter
+        self.drafter_override = None
+        self._drafter = None
+        self._drafter_key = None
 
     # -- single-batch generation (rolling cache) -----------------------------
     def generate(self, batch: Dict[str, Any], steps: int
@@ -236,6 +280,18 @@ class Engine:
         # one sampling policy for every path: generate(), generate_fori()
         # and the run() loop all go through CompiledModel._sample
         return self.compiled._sample(logits, key, temperature)
+
+    def _get_drafter(self, spec):
+        if self.drafter_override is not None:
+            return self.drafter_override
+        from repro.serving.speculation import build_drafter
+        key = (spec.kind, spec.draft_cfg, spec.ngram_max, spec.ngram_min)
+        if self._drafter is None or self._drafter_key != key:
+            self._drafter = build_drafter(
+                spec, max_seq_len=self.ecfg.max_seq_len,
+                target_cfg=self.plan.cfg)
+            self._drafter_key = key
+        return self._drafter
 
     def new_cache(self) -> PagedKVCache:
         e = self.ecfg
@@ -257,6 +313,7 @@ class Engine:
         with copy-on-write forks keeping shared blocks immutable."""
         e = self.ecfg
         cache = self.new_cache()
+        self.last_cache = cache
         sched = Scheduler(e.max_batch, e.block_size, cache.pool,
                           max_seq_len=e.max_seq_len,
                           prefix=cache if e.prefix_cache else None,
@@ -280,6 +337,18 @@ class Engine:
                 "chunked_prefill) needs every per-request state entry to be "
                 "paged self-attention; recurrent or cross-attention state "
                 "can only advance one token per tick")
+        spec = e.speculation
+        spec_on = spec is not None
+        if spec_on and any(not en.paged for en in cache._entries):
+            raise ValueError(
+                f"{self.plan.cfg.name}: speculative decoding needs every "
+                "per-request state entry to be paged self-attention; "
+                "rollback truncates block chains, which rolling or "
+                "cross-attention state cannot express")
+        drafter = self._get_drafter(spec) if spec_on else None
+        base_key = jax.random.key(e.seed) if spec_on else None
+        vocab = self.plan.cfg.vocab_size
+        tokens_drafted = tokens_accepted = spec_ticks = 0
 
         rng = jax.random.key(e.seed)
         t0 = time.perf_counter()
@@ -344,9 +413,21 @@ class Engine:
                 logits, pstate, _ = self.compiled.prefill(
                     self.params, {"tokens": jnp.asarray(tokens),
                                   "positions": jnp.asarray(positions)})
-                rng, k = jax.random.split(rng)
-                toks = np.asarray(
-                    self._sample(logits[:, -1], k, e.temperature))
+                if spec_on and e.temperature > 0:
+                    # per-request rng streams: the first generated token is
+                    # commit index 0 of its request's stream, so prefilled
+                    # and speculative ticks draw from one counter sequence
+                    serials = np.full(Bp, -1, np.int32)
+                    for i, a in enumerate(adm):
+                        serials[i] = sched.slots[a.slot].serial
+                    toks = np.asarray(sample_targets(
+                        logits[:, -1][:, None, :], base_key,
+                        jnp.asarray(serials), jnp.zeros(Bp, jnp.int32),
+                        e.temperature))[:, 0]
+                else:
+                    rng, k = jax.random.split(rng)
+                    toks = np.asarray(
+                        self._sample(logits[:, -1], k, e.temperature))
                 host_syncs += 1
                 for i, a in enumerate(adm):
                     cache.admit(a.slot, a.request.prompt_len,
@@ -383,7 +464,7 @@ class Engine:
             #     tokens are dropped here and the slot evicted right after).
             rem = min(s.request.max_new_tokens - s.result.n_generated
                       for s in (sched.slots[i] for i in active))
-            if e.fori_seg >= 2 and not e.capture_logits \
+            if e.fori_seg >= 2 and not e.capture_logits and not spec_on \
                     and rem >= e.fori_seg \
                     and not any(sched.slots[i].pending for i in active):
                 T = e.fori_seg
@@ -422,11 +503,39 @@ class Engine:
             #     up on a prompt tail feed their next chunk_size prompt
             #     tokens (a (B, k) catch-up cell, k from the chunk ladder);
             #     caught-up slots advance one sampled token in column 0 of
-            #     the same tick.
+            #     the same tick.  With speculation on, caught-up slots may
+            #     instead carry a verify row [last_token, d_1..d_j]: every
+            #     column scores in the same cell, acceptance is decided on
+            #     the host, and the ledger rolls rejected columns back.
+            proposals: Dict[int, np.ndarray] = {}
+            if spec_on:
+                for i in active:
+                    s = sched.slots[i]
+                    if s.pending or s.request.speculate is False:
+                        continue
+                    # cap keeps every possible commit (n_acc + 1 <= j + 1)
+                    # inside the request's remaining budget and reservation
+                    cap = min(spec.draft_k,
+                              s.request.max_new_tokens
+                              - s.result.n_generated - 1)
+                    if cap < 1:
+                        continue
+                    hist = np.concatenate(
+                        [np.asarray(s.request.prompt, np.int32),
+                         np.asarray(s.result.tokens, np.int32)])
+                    d = np.asarray(drafter.propose(hist, cap),
+                                   np.int32).reshape(-1)[:cap]
+                    bad = np.nonzero((d < 0) | (d >= vocab))[0]
+                    if bad.size:          # out-of-vocab drafts never match
+                        d = d[:int(bad[0])]
+                    if d.size:
+                        proposals[i] = d
+                        cache.spec_begin(i)
             cache.prepare_decode(active)       # COW forks before any write
-            need = max((min(len(sched.slots[i].pending), e.chunk_size)
+            need = max((len(proposals[i]) + 1 if i in proposals
+                        else min(len(sched.slots[i].pending), e.chunk_size)
                         for i in active), default=1)
-            k_tick = bucket_for(max(need, 1), e.chunk_buckets)
+            k_tick = bucket_for(max(need, 1), e.tick_buckets)
             fills: Dict[int, int] = {}
             if k_tick > 1:
                 tokens = np.zeros((B, k_tick), np.int32)
@@ -435,7 +544,16 @@ class Engine:
                 for s in sched.slots[:B]:
                     if s.free:
                         continue
-                    if s.pending:
+                    if s.index in proposals:
+                        d = proposals[s.index]
+                        m = d.size + 1
+                        tokens[s.index, 0] = s.last_token
+                        tokens[s.index, 1:m] = d
+                        positions[s.index, :m] = \
+                            s.pos + np.arange(m, dtype=np.int32)
+                        fills[s.index] = m
+                        sel[s.index] = 0
+                    elif s.pending:
                         m = min(len(s.pending), k_tick)
                         tokens[s.index, :m] = s.pending[:m]
                         positions[s.index, :m] = \
@@ -464,13 +582,39 @@ class Engine:
             cache.state = merge_state(cache.state, new_part,
                                       cache.slot_axes, B)
             cache.note_decode_tick(active, fills)
-            rng, k = jax.random.split(rng)
-            # each row samples from its last fed column's logits (column 0
-            # for plain decode rows, the chunk's last fill for catch-up rows)
-            last_lg = jnp.take_along_axis(
-                logits, jnp.asarray(sel)[:, None, None], axis=1)[:, 0]
-            toks = np.asarray(self._sample(last_lg, k, e.temperature))
+            if spec_on:
+                # every column's target token at once: column c of row i is
+                # the token the target model emits at commit index
+                # t0s[i] + c.  At temperature 0 that's a plain argmax
+                # (rng-free, byte-identical to the 1-token loop); sampled,
+                # each (serial, index) pair owns one counter-mode key, so
+                # the draw is independent of tick packing and drafters.
+                if e.temperature > 0:
+                    serials = np.full(B, -1, np.int32)
+                    t0s = np.zeros(B, np.int32)
+                    for i in active:
+                        s = sched.slots[i]
+                        serials[i] = s.serial
+                        # catch-up rows: only the final column (the first
+                        # generated token) can commit — index 0 there
+                        t0s[i] = s.result.n_generated - (fills[i] - 1) \
+                            if s.pending else s.result.n_generated
+                    targets = np.asarray(sample_targets(
+                        logits, base_key, jnp.asarray(serials),
+                        jnp.asarray(t0s), e.temperature))
+                else:
+                    targets = np.asarray(jnp.argmax(logits, axis=-1))
+                lg_np = np.asarray(logits) if e.capture_logits else None
+            else:
+                rng, k = jax.random.split(rng)
+                # each row samples from its last fed column's logits
+                # (column 0 for plain decode rows, the chunk's last fill
+                # for catch-up rows)
+                last_lg = jnp.take_along_axis(
+                    logits, jnp.asarray(sel)[:, None, None], axis=1)[:, 0]
+                toks = np.asarray(self._sample(last_lg, k, e.temperature))
             host_syncs += 1
+            spec_commits: Dict[int, int] = {}
             for sidx in active:
                 s = sched.slots[sidx]
                 if s.pending:
@@ -486,12 +630,48 @@ class Engine:
                     if e.capture_logits:
                         s.result.logits.append(
                             np.asarray(logits[sidx, int(sel[sidx])]))
-                    sched.record_token(sidx, int(toks[sidx]), first=True)
+                    tok = int(targets[sidx, m - 1]) if spec_on \
+                        else int(toks[sidx])
+                    sched.record_token(sidx, tok, first=True)
+                elif sidx in proposals:
+                    # acceptance walk: draft d[c] survives iff it equals
+                    # the target token of its column; the committed tokens
+                    # are the accepted prefix plus the first mismatch's
+                    # target (the bonus token on accept-all)
+                    d = proposals[sidx]
+                    j = int(d.size)
+                    n_acc = 0
+                    while n_acc < j and \
+                            int(targets[sidx, n_acc]) == int(d[n_acc]):
+                        n_acc += 1
+                    n_commit = n_acc + 1
+                    tokens_drafted += j
+                    tokens_accepted += n_acc
+                    s.result.tokens_drafted += j
+                    s.result.tokens_accepted += n_acc
+                    spec_commits[sidx] = n_commit
+                    stop = s.request.stop_token
+                    for c in range(n_commit):
+                        if e.capture_logits:
+                            s.result.logits.append(lg_np[sidx, c])
+                        tok = int(targets[sidx, c])
+                        sched.record_token(sidx, tok)
+                        if stop is not None and tok == stop:
+                            break
                 else:
                     if e.capture_logits:
                         s.result.logits.append(
                             np.asarray(logits[sidx, int(sel[sidx])]))
-                    sched.record_token(sidx, int(toks[sidx]))
+                    tok = int(targets[sidx, 0]) if spec_on \
+                        else int(toks[sidx])
+                    sched.record_token(sidx, tok)
+            if spec_commits:
+                # all windows close together: one batched device resync
+                # for every rolled-back slot (must precede eviction — the
+                # prefix index only ever sees committed tokens)
+                cache.spec_commit_many(spec_commits)
+            if proposals:
+                spec_ticks += 1
             ticks += 1
             peak_used = max(peak_used, cache.pool.used_blocks)
             peak_live = max(peak_live, cache.live_tokens())
@@ -547,6 +727,17 @@ class Engine:
             "catchup_tokens": catchup_tokens,
             "prefix_hit_rate": (led.cached_tokens / prompt_tokens_total
                                 if prompt_tokens_total else 0.0),
+            # speculative-decoding outcome (off -> False + zeros)
+            "speculation": spec_on,
+            "spec_drafter": spec.describe() if spec_on else "off",
+            "spec_draft_k": spec.draft_k if spec_on else 0,
+            "spec_ticks": spec_ticks,
+            "spec_tokens_drafted": tokens_drafted,
+            "spec_tokens_accepted": tokens_accepted,
+            "spec_acceptance_rate": (tokens_accepted / tokens_drafted
+                                     if tokens_drafted else 0.0),
+            "spec_rollback_tokens": led.spec_rollback_tokens,
+            "spec_fork_undos": led.spec_fork_undos,
         })
         self.last_report = report
         return report
@@ -563,7 +754,8 @@ class Engine:
                  f"prefix_cache={'on' if e.prefix_cache else 'off'} "
                  f"chunk={e.chunk_size}"
                  f"{'+chunked_prefill' if e.chunked_prefill else ''} "
-                 f"fori_seg={e.fori_seg or 'off'}"]
+                 f"fori_seg={e.fori_seg or 'off'} "
+                 f"spec={e.speculation.describe() if e.speculation else 'off'}"]
         if self.last_report is not None:
             lines.append("  " +
                          self.last_report.describe().replace("\n", "\n  "))

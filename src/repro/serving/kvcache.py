@@ -68,6 +68,17 @@ def _scatter_blocks(pool, bidx, seg):
     return pool.at[bidx].set(seg)
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _set_table_rows(bt, ln, slots, rows, lens):
+    return bt.at[slots].set(rows), ln.at[slots].set(lens)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _set_table_rows_folded(bt, ln, slots, rows, lens):
+    # (lead, slots, ...) layout: rows/lens broadcast across the lead axis
+    return bt.at[:, slots].set(rows), ln.at[:, slots].set(lens)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_blocks_folded(pool, bidx, seg):
     return pool.at[:, bidx].set(seg)
@@ -261,6 +272,15 @@ class BlockLedger:
         self.misses = 0
         self.cached_tokens = 0
         self.cow_forks = 0
+        self.spec_rollback_tokens = 0
+        self.spec_fork_undos = 0
+        # speculative windows (spec_begin .. spec_commit): per-slot base
+        # length snapshot plus the COW forks performed inside the window —
+        # (chain_idx, old, new, from_spare) — so a rollback can undo forks
+        # that served only rejected tokens
+        self._spec_base: List[Optional[int]] = [None] * n_slots
+        self._spec_forks: List[List[Tuple[int, int, int, bool]]] = \
+            [[] for _ in range(n_slots)]
         # one-entry hash memo: a blocked queue head is re-matched every
         # tick and a successful admission hashes right after its match —
         # both repeat the same prompt back-to-back
@@ -400,7 +420,8 @@ class BlockLedger:
         ci = self.lens[slot] // self.block_size
         old = self.chains[slot][ci]
         new = self.spares[slot]
-        if new is not None:
+        from_spare = new is not None
+        if from_spare:
             self.spares[slot] = None
         else:
             # defensive: admission charges a spare for every fork this
@@ -409,10 +430,66 @@ class BlockLedger:
         self.chains[slot][ci] = new
         self.pool.decref(old)
         self.cow_forks += 1
+        if self._spec_base[slot] is not None:
+            self._spec_forks[slot].append((ci, old, new, from_spare))
         return ci, old, new
 
     def note_write(self, slot: int, n: int = 1) -> None:
         self.lens[slot] += n
+
+    # -- speculative windows (draft-verify-rollback) ------------------------
+    def spec_begin(self, slot: int) -> None:
+        """Open a speculative window on ``slot``: snapshot its committed
+        length so :meth:`spec_commit` can roll back rejected writes (and
+        undo COW forks that only speculative tokens needed)."""
+        if self._spec_base[slot] is not None:
+            raise RuntimeError(f"slot {slot} already has an open "
+                               "speculative window")
+        if not self.chains[slot]:
+            raise RuntimeError(f"slot {slot} is empty; nothing to speculate")
+        self._spec_base[slot] = self.lens[slot]
+        self._spec_forks[slot] = []
+
+    def spec_commit(self, slot: int, committed: int) -> int:
+        """Close ``slot``'s speculative window, keeping the first
+        ``committed`` of the tokens written inside it: the length rolls
+        back to ``base + committed`` and any fork performed inside the
+        window whose block ends up holding *no* committed token is undone —
+        the chain is repointed back at the (still live or LRU-parked)
+        shared original, and the forked copy is released, or restored as
+        the slot's charged COW spare when it came from one.  This is the
+        no-leak guarantee under partial acceptance.  Returns the number of
+        rolled-back tokens."""
+        base = self._spec_base[slot]
+        if base is None:
+            raise RuntimeError(f"slot {slot} has no open speculative window")
+        self._spec_base[slot] = None
+        written = self.lens[slot] - base
+        if not 0 <= committed <= written:
+            raise ValueError(
+                f"slot {slot}: committed {committed} outside the window's "
+                f"{written} speculative writes")
+        rolled = written - committed
+        self.lens[slot] = keep_end = base + committed
+        for ci, old, new, from_spare in reversed(self._spec_forks[slot]):
+            # the window's first write into block ci; if the commit kept
+            # anything at or past it, the forked copy holds committed K/V
+            # the original lacks and must stay
+            first_write = max(base, ci * self.block_size)
+            if keep_end > first_write:
+                continue
+            if self.pool.refcount(old) == 0 and old not in self.pool._lru:
+                continue                 # original reclaimed: keep the fork
+            self.pool.incref(old)
+            self.chains[slot][ci] = old
+            if from_spare and self.spares[slot] is None:
+                self.spares[slot] = new  # restore the charged spare
+            else:
+                self.pool.decref(new)
+            self.spec_fork_undos += 1
+        self._spec_forks[slot] = []
+        self.spec_rollback_tokens += rolled
+        return rolled
 
     def register_prompt(self, slot: int) -> None:
         """Index ``slot``'s fully-filled prompt blocks (call once the whole
@@ -456,6 +533,8 @@ class BlockLedger:
         self._prompt_len[slot] = 0
         self._prompt_hashes[slot] = []
         self._registered[slot] = False
+        self._spec_base[slot] = None
+        self._spec_forks[slot] = []
         return chain
 
     # -- invariants ----------------------------------------------------------
@@ -660,6 +739,34 @@ class PagedKVCache:
                           else st["len"].at[slot].set(length))
             self.state[e.ukey][e.skey] = new
 
+    def _set_tables_many(self, updates: Dict[int, Tuple[np.ndarray,
+                                                        int]]) -> None:
+        """Batched table/len resync: one jitted donated scatter pair per
+        entry for *all* dirty slots, instead of two eager scatters per slot
+        (the per-slot eager path costs more than the decode cell itself on
+        small models).  The slot vector is padded to ``max_batch`` by
+        repeating the last slot — duplicate indices carry identical values,
+        so the scatter is well-defined — keeping one compiled program
+        regardless of how many slots rolled back."""
+        if not updates:
+            return
+        n_slots = len(self.ledger.lens)
+        slots = list(updates)
+        slots += [slots[-1]] * (n_slots - len(slots))
+        sl = jnp.asarray(np.asarray(slots, np.int32))
+        rows = jnp.asarray(np.stack([updates[s][0] for s in slots]))
+        lens = jnp.asarray(np.asarray([updates[s][1] for s in slots],
+                                      np.int32))
+        for e in self._entries:
+            if not e.paged:
+                continue
+            st = self.state[e.ukey][e.skey]
+            new = dict(st)
+            setter = _set_table_rows_folded if e.nlead else _set_table_rows
+            new["bt"], new["len"] = setter(st["bt"], st["len"], sl, rows,
+                                           lens)
+            self.state[e.ukey][e.skey] = new
+
     def _table_row(self, slot: int) -> np.ndarray:
         row = np.zeros(self.blocks_per_slot, np.int32)
         chain = self.ledger.chains[slot]
@@ -820,6 +927,50 @@ class PagedKVCache:
         rows advance by their chunk fill; plain decode rows by 1)."""
         for s in active_slots:
             self.ledger.note_write(s, 1 if counts is None else counts[s])
+
+    # -- speculative windows -------------------------------------------------
+    def spec_begin(self, slot: int) -> None:
+        """Open a speculative window on ``slot`` (see
+        :meth:`BlockLedger.spec_begin`).  Call *before* ``prepare_decode``
+        so a COW fork triggered by the verify tick is logged inside the
+        window."""
+        self.ledger.spec_begin(slot)
+
+    def spec_commit(self, slot: int, committed: int) -> int:
+        """Close the window keeping ``committed`` tokens.  The ledger rolls
+        back first; when anything changed — rejected writes leave the
+        device-side ``len`` ahead of the committed length (the (B, k) cell
+        advances it by the *fed* count), and an undone fork leaves the
+        device block table pointing at the released copy — the slot's table
+        row and length are rewritten from the ledger, so the next
+        device-length-driven 1-token tick writes at the committed
+        position.  Rejected K/V behind the new length is garbage but
+        unreachable: the verify mask only admits ``kpos <= qpos`` and later
+        writes land on it first."""
+        undos0 = self.ledger.spec_fork_undos
+        rolled = self.ledger.spec_commit(slot, committed)
+        if rolled or self.ledger.spec_fork_undos != undos0:
+            self._set_tables(slot, self._table_row(slot),
+                             self.ledger.lens[slot])
+        return rolled
+
+    def spec_commit_many(self, commits: Dict[int, int]) -> int:
+        """Close every window in ``commits`` (slot -> committed count) and
+        resync all dirty slots with a *single* batched device update — the
+        per-tick engine path (per-slot :meth:`spec_commit` issues one eager
+        scatter pair per slot, which dominates the verify tick on small
+        models).  Returns the total rolled-back token count."""
+        dirty: Dict[int, Tuple[np.ndarray, int]] = {}
+        total = 0
+        for slot, committed in commits.items():
+            undos0 = self.ledger.spec_fork_undos
+            rolled = self.ledger.spec_commit(slot, committed)
+            total += rolled
+            if rolled or self.ledger.spec_fork_undos != undos0:
+                dirty[slot] = (self._table_row(slot),
+                               self.ledger.lens[slot])
+        self._set_tables_many(dirty)
+        return total
 
     def evict(self, slot: int) -> int:
         """Free ``slot``'s block chain and park it on the trash block.

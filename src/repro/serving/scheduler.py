@@ -47,6 +47,10 @@ class Request:
     prompt: np.ndarray                 # 1-D int32 token ids
     max_new_tokens: int = 16
     stop_token: Optional[int] = None
+    # per-request speculative-decoding toggle: None defers to the engine
+    # default (on when EngineConfig.speculation is set); False pins this
+    # request to plain 1-token decode rows even in a speculating engine
+    speculate: Optional[bool] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -77,10 +81,19 @@ class RequestResult:
     # filled only under EngineConfig.capture_logits: the logits row each
     # recorded token was sampled from (parity/debug tooling)
     logits: List[Any] = field(default_factory=list)
+    # speculative decoding: drafts fed through verify ticks for this
+    # request, and how many were accepted (zeros when speculation is off)
+    tokens_drafted: int = 0
+    tokens_accepted: int = 0
 
     @property
     def n_generated(self) -> int:
         return len(self.tokens)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.tokens_accepted / self.tokens_drafted \
+            if self.tokens_drafted else 0.0
 
     @property
     def latency_s(self) -> float:
@@ -114,6 +127,10 @@ class Slot:
     last_token: int = 0
     served: int = 0                    # lifetime occupants (refill counting)
     pending: List[int] = field(default_factory=list)  # uncovered prompt tail
+    # submission-order serial of the occupant: the per-request rng-stream
+    # index speculative sampling folds into (stable across engine configs,
+    # so sampled speculative output is replay-comparable)
+    serial: int = -1
 
     @property
     def free(self) -> bool:
@@ -149,9 +166,9 @@ class Scheduler:
         # prefix-cache hooks (duck-typed: the PagedKVCache / BlockLedger):
         # match_and_lock / unlock / fresh_blocks_needed
         self.prefix = prefix
-        # queue entries carry their own submit timestamp (the same Request
-        # object may be submitted more than once)
-        self.queue: Deque[Tuple[Request, float]] = deque()
+        # queue entries carry their own submit timestamp and submission
+        # serial (the same Request object may be submitted more than once)
+        self.queue: Deque[Tuple[Request, float, int]] = deque()
         self.slots = [Slot(i) for i in range(n_slots)]
         self.results: List[RequestResult] = []
         # counters
@@ -166,7 +183,7 @@ class Scheduler:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new={req.total_budget} "
                 f"exceeds max_seq_len={self.max_seq_len}")
-        self.queue.append((req, self.clock()))
+        self.queue.append((req, self.clock(), self.n_submitted))
         self.n_submitted += 1
 
     def has_work(self) -> bool:
@@ -195,7 +212,7 @@ class Scheduler:
         free = [s for s in self.slots if s.free]
         reserved = 0                   # blocks promised, not yet allocated
         while self.queue and free:
-            req, t_submit = self.queue[0]
+            req, t_submit, serial = self.queue[0]
             match = None
             if self.prefix is not None:
                 match = self.prefix.match_and_lock(req.prompt)
@@ -222,6 +239,7 @@ class Scheduler:
                 self.n_refills += 1
             slot.served += 1
             slot.request = req
+            slot.serial = serial
             covered = match.covered if match is not None else 0
             chunked = self.chunk_prefill and not covered
             if chunked:
@@ -292,6 +310,7 @@ class Scheduler:
         slot.pos = 0
         slot.last_token = 0
         slot.pending = []
+        slot.serial = -1
         self.n_evicted += 1
         return res
 

@@ -1,0 +1,268 @@
+"""Speculative decoding over the paged KV pool: draft -> verify -> rollback.
+
+One verify tick amortizes a model step over up to ``draft_k + 1`` tokens: a
+drafter proposes ``j <= draft_k`` continuation tokens for a slot, the engine
+feeds ``[last_token, d_1..d_j]`` as one row of the same ``(B, k)`` cell the
+chunked catch-up path uses (``paged_decode_attention`` with explicit
+``qpos`` — the mask is purely positional, so the speculative columns score
+exactly as a sequential replay would), and every column's logits come back
+at once.  Acceptance is *sample-from-target*: column ``c`` is sampled (or
+argmaxed, at temperature 0) into the target token ``x_c``; draft ``d_{c+1}``
+is accepted iff it equals ``x_c``, and the committed tokens of the tick are
+``x_0..x_r`` where ``r`` is the first mismatch (or ``j``, the bonus token,
+on accept-all).  Every emitted token is therefore a true sample from the
+target model's distribution given its committed prefix — the standard
+rejection-sampling identity specialized to deterministic drafters — which
+gives two hard guarantees the tests pin down:
+
+* greedy speculative output is **byte-identical** to the 1-token host loop
+  (argmax doesn't care how many columns the tick carried);
+* sampled speculative output is **drafter-invariant**: the token at commit
+  index ``t`` of request ``serial`` always draws from
+  ``fold_in(fold_in(key(seed), serial), t)`` (:func:`sample_targets`), so
+  any drafter — including the null drafter that proposes nothing — produces
+  the same byte stream.
+
+Rejected columns leave garbage K/V behind the committed length; it is never
+attended (the causal positional mask only admits ``kpos <= qpos`` and later
+writes overwrite it first), but the device-side lengths and the ledger must
+roll back — :meth:`repro.serving.kvcache.BlockLedger.spec_begin` /
+``spec_commit`` snapshot and truncate, undoing COW forks that served only
+rejected tokens so the pool never leaks under partial acceptance.
+
+Drafters are advisory: a wrong (or out-of-vocab) proposal only lowers the
+acceptance rate, never changes output.  Built-ins:
+
+* :class:`NGramDrafter` — prompt-lookup: propose the continuation of the
+  most recent earlier occurrence of the history's trailing n-gram (free;
+  strong on shared-prefix and self-repetitive decode);
+* :class:`DraftModelDrafter` — a small registered config compiled through
+  ``flow.compile`` and rolled greedily ``k`` tokens;
+* :class:`NullDrafter` — proposes nothing (the sampled-parity baseline).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EMPTY = np.empty(0, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SpeculationConfig:
+    """The ``EngineConfig.speculation`` knob: which drafter, how many draft
+    tokens per verify tick.  Invariants (kind, draft_k vs the envelope, the
+    fori_seg clash) live in ``repro.analysis.rules.speculation_valid`` —
+    diagnostic S307."""
+    kind: str = "ngram"                # "ngram" | "draft" | "null"
+    draft_k: int = 4                   # drafts per verify tick (cell is k+1)
+    draft_cfg: Optional[str] = None    # registered config name (kind="draft")
+    ngram_max: int = 3                 # longest trailing n-gram to look up
+    ngram_min: int = 1
+
+    @classmethod
+    def parse(cls, text: str) -> Optional["SpeculationConfig"]:
+        """``"ngram:4" | "draft:<cfg>:4" | "null:2" | "off"`` (CLI form)."""
+        t = text.strip()
+        if t in ("", "off", "none"):
+            return None
+        parts = t.split(":")
+        if parts[0] == "draft":
+            if len(parts) != 3:
+                raise ValueError(
+                    f"speculation spec {text!r}: expected draft:<cfg>:<k>")
+            return cls(kind="draft", draft_cfg=parts[1],
+                       draft_k=int(parts[2]))
+        if len(parts) > 2:
+            raise ValueError(
+                f"speculation spec {text!r}: expected <kind>:<k> or off")
+        k = int(parts[1]) if len(parts) == 2 else 4
+        return cls(kind=parts[0], draft_k=k)
+
+    def describe(self) -> str:
+        if self.kind == "draft":
+            return f"draft:{self.draft_cfg}:{self.draft_k}"
+        return f"{self.kind}:{self.draft_k}"
+
+
+# ---------------------------------------------------------------------------
+# target sampling (the rng streams the exactness guarantee hangs on)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("temperature",))
+def sample_targets(logits, base_key, serials, t0s, temperature: float):
+    """Per-request counter-mode target sampling for the verify cell.
+
+    Row ``i``, column ``c`` draws from
+    ``fold_in(fold_in(base_key, serials[i]), t0s[i] + c)`` — the key is a
+    pure function of (request serial, commit index), independent of how
+    many columns this tick carried, which slots shared it, or what any
+    drafter proposed.  That makes sampled speculative output
+    drafter-invariant byte-for-byte (the accept-all rng-parity test rides
+    this).  ``logits``: (B, K, V); ``serials``/``t0s``: (B,) int32; returns
+    (B, K) int32 targets.
+    """
+    K = logits.shape[1]
+
+    def row(lg, serial, t0):
+        rk = jax.random.fold_in(base_key, serial)
+
+        def col(lg_c, c):
+            return jax.random.categorical(
+                jax.random.fold_in(rk, t0 + c), lg_c / temperature)
+
+        return jax.vmap(col)(lg, jnp.arange(K, dtype=jnp.int32))
+
+    return jax.vmap(row)(logits, serials, t0s).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# drafters
+# ---------------------------------------------------------------------------
+
+class Drafter:
+    """Drafter protocol: ``propose(history, k)`` returns up to ``k`` int32
+    continuation tokens for a request whose committed tokens (prompt +
+    generated) are ``history``.  Proposals are advisory — they steer the
+    acceptance rate, never the output."""
+    kind = "base"
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+class NullDrafter(Drafter):
+    """Proposes nothing: every tick degrades to a plain 1-token decode.
+    Exists as the baseline for the sampled drafter-invariance tests."""
+    kind = "null"
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        return _EMPTY
+
+
+class NGramDrafter(Drafter):
+    """Prompt-lookup drafting: find the most recent earlier occurrence of
+    the history's trailing n-gram (longest n first) and propose the tokens
+    that followed it.  When the continuation runs off the end of history
+    (the most recent match sits near the tail — always the case once decode
+    settles into a short repetition cycle), the drafted tokens are appended
+    to the lookup window and the search repeats, so a period-p cycle drafts
+    all ``k`` tokens instead of truncating at the tail.  Zero model cost;
+    strong whenever decode revisits its own context — shared system
+    prompts, code, repetitive spans."""
+    kind = "ngram"
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise ValueError(f"need 1 <= min_n <= max_n, "
+                             f"got ({min_n}, {max_n})")
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def _lookup(self, h: np.ndarray, k: int) -> np.ndarray:
+        H = int(h.size)
+        for n in range(min(self.max_n, H - 1), self.min_n - 1, -1):
+            pat = h[H - n:]
+            # candidate starts 0..H-1-n: a match must have at least one
+            # continuation token, and the trailing gram itself (start H-n)
+            # is excluded
+            w = np.lib.stride_tricks.sliding_window_view(h, n)[:H - n]
+            hits = np.nonzero((w == pat).all(axis=1))[0]
+            if hits.size:
+                s = int(hits[-1])
+                return h[s + n: s + n + k]
+        return _EMPTY
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        h = np.asarray(history, np.int64).reshape(-1)
+        if h.size < 2 or k < 1:
+            return _EMPTY
+        out = self._lookup(h, k)
+        # each extension round drafts >= 1 token or breaks, so this
+        # terminates after at most k rounds
+        while 0 < out.size < k:
+            ext = self._lookup(np.concatenate([h, out]), k - int(out.size))
+            if not ext.size:
+                break
+            out = np.concatenate([out, ext])
+        return out.astype(np.int32)
+
+
+class DraftModelDrafter(Drafter):
+    """A small registered config compiled via ``flow.compile`` and rolled
+    greedily: one right-padded prefill over the history, then ``k - 1``
+    single-token decode steps through its own rolling cache.  Out-of-vocab
+    proposals (draft vocab larger than the target's) are truncated by the
+    engine — like every drafter, this one is advisory only."""
+    kind = "draft"
+
+    def __init__(self, draft_cfg: Any, *, max_seq_len: int,
+                 smoke: bool = False):
+        from repro import flow as rflow
+        from repro.configs.base import FlowConfig, ShapeConfig
+        self.cm = rflow.compile(
+            draft_cfg, ShapeConfig("spec_draft", "decode", max_seq_len, 1),
+            FlowConfig(mode="folded", precision="fp32"), smoke=smoke)
+        self.params = self.cm.init_params(jax.random.key(0))
+        self.cache_len = self.cm.plan.cache_len
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        h = np.asarray(history, np.int32).reshape(-1)
+        L = int(h.size)
+        k = min(k, self.cache_len - L)
+        if L < 1 or k < 1:
+            return _EMPTY
+        # bucket the prefill width (bounded retraces: one per pow2 rung)
+        S = 8
+        while S < L:
+            S *= 2
+        S = min(S, self.cache_len)
+        tokens = np.zeros((1, S), np.int32)
+        tokens[0, :L] = h
+        positions = np.full((1, S), -1, np.int32)
+        positions[0, :L] = np.arange(L, dtype=np.int32)
+        logits, state, _ = self.cm.prefill(
+            self.params, {"tokens": jnp.asarray(tokens),
+                          "positions": jnp.asarray(positions)})
+        out = [int(jnp.argmax(logits[0, L - 1]))]
+        for t in range(1, k):
+            lg, state, _ = self.cm.decode(
+                self.params,
+                {"tokens": jnp.asarray([[out[-1]]], jnp.int32)},
+                state, jnp.int32(L + t - 1))
+            out.append(int(jnp.argmax(lg[0, -1])))
+        return np.asarray(out, np.int32)
+
+
+def build_drafter(spec: SpeculationConfig, *, max_seq_len: int,
+                  target_cfg: Any = None) -> Drafter:
+    """Instantiate the drafter a :class:`SpeculationConfig` names.  The
+    draft-model drafter inherits the target's smoke-ness so the CI smoke
+    models draft against smoke-sized configs."""
+    if spec.kind == "ngram":
+        return NGramDrafter(spec.ngram_max, spec.ngram_min)
+    if spec.kind == "null":
+        return NullDrafter()
+    if spec.kind == "draft":
+        return DraftModelDrafter(spec.draft_cfg, max_seq_len=max_seq_len,
+                                 smoke=_is_smoke(target_cfg))
+    raise ValueError(f"unknown drafter kind {spec.kind!r}")
+
+
+def _is_smoke(cfg: Any) -> bool:
+    if cfg is None:
+        return False
+    try:
+        from repro.configs import get_smoke
+        return get_smoke(cfg.name) == cfg
+    except Exception:
+        return False

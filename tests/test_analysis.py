@@ -243,6 +243,13 @@ def test_s306_chunk_size_out_of_range(lm_plan):
     _fires_once(res, "S306")
 
 
+def test_s307_speculation_fori_seg_clash(lm_plan):
+    ecfg = _ecfg(speculation="ngram:4")
+    ecfg.fori_seg = 4           # S307: host decides acceptance every tick
+    res = verify_engine_config(lm_plan, ecfg)
+    _fires_once(res, "S307")
+
+
 # ---------------------------------------------------------------------------
 # negative cases — mesh-split divisibility (M, warnings)
 # ---------------------------------------------------------------------------

@@ -10,6 +10,9 @@ mirrors onto device state), checking after every step:
 * ``free + cached + live == pool size - 1`` (trash excluded) and every
   live refcount equals the number of chain/spare references,
 * no slot's chain references a freed block,
+* speculative windows (fork -> write -> partial-acceptance rollback via
+  ``spec_begin``/``spec_commit``) conserve blocks and never double-free —
+  undone COW forks repoint to still-valid originals,
 * the trash block is never allocated, referenced, cached or chained,
 * LRU eviction only ever reclaims unreferenced (parked) blocks,
 * prefix matches never cover the whole prompt (the last token is always
@@ -109,6 +112,33 @@ class Harness:
                 # catch-up complete: the prompt is fully resident
                 self.led.register_prompt(s)
 
+    def spec_tick(self, j: int, commit_sel: int) -> None:
+        """One speculative verify window over every live slot: open the
+        window, fork-before-write, write up to ``j`` speculative tokens,
+        then commit a prefix chosen by ``commit_sel`` and roll the rest
+        back — the draft->verify->rollback discipline.  Windows opened over
+        a catch-up position write into COW-shared blocks, so full rejection
+        exercises the fork-undo path (chain repointed at the original,
+        spare restored).  Prompt registration happens only from *committed*
+        length — never on a write that might roll back."""
+        for s in range(SLOTS):
+            if not self.led.chains[s]:
+                continue
+            fed = min(j, self.target[s] - 1 - self.led.lens[s])
+            if fed < 1:
+                continue
+            self.led.spec_begin(s)
+            for _ in range(fed):
+                if self.led.needs_fork(s):
+                    ci, old, new = self.led.fork(s)
+                    assert old != new and new != TRASH_BLOCK
+                    self.forks_seen += 1
+                self.led.note_write(s)
+            self.led.spec_commit(s, commit_sel % (fed + 1))
+            if not self.led._registered[s] \
+                    and self.led.lens[s] >= self.prompt_len[s]:
+                self.led.register_prompt(s)
+
     def finish(self, which: int) -> None:
         live = [s for s in range(SLOTS) if self.led.chains[s]]
         if not live:
@@ -123,8 +153,10 @@ class Harness:
             self.admit(seed=op[1], length=op[2], max_new=op[3])
         elif kind == 1:
             self.tick()
-        else:
+        elif kind == 2:
             self.finish(op[1])
+        else:
+            self.spec_tick(op[1], op[2])
         self.led.check()
 
 
@@ -133,6 +165,7 @@ OPS = st.one_of(
               st.integers(1, MAX_NEW)),
     st.tuples(st.just(1)),
     st.tuples(st.just(2), st.integers(0, SLOTS - 1)),
+    st.tuples(st.just(3), st.integers(1, MAX_NEW), st.integers(0, 10)),
 )
 SCRIPTS = st.lists(OPS, min_size=1, max_size=40)
 POOLS = st.integers(8, 1 + SLOTS * BPS)

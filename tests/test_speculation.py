@@ -1,0 +1,318 @@
+"""Speculative decoding: exactness gates, rollback accounting, drafters.
+
+The whole feature is gated on being *exact*:
+
+* greedy speculative output (tokens AND sampled-step logits) is
+  byte-identical to the 1-token-per-tick host loop, for every drafter and
+  combined with chunked prefill / prefix caching,
+* sampled speculative output is drafter-invariant — the per-request
+  counter-mode rng streams make the token at commit index t of request
+  serial s a pure function of (seed, s, t), so the null drafter and the
+  n-gram drafter produce the same bytes,
+* an oracle drafter (replaying a previous run's outputs) accepts
+  everything: the accept-all path must reproduce the same bytes with fewer
+  host syncs — the rng-stream parity gate,
+* rejected drafts roll back through the ledger: no pool leak, COW forks
+  that served only rejected tokens are undone.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kvcache import BlockLedger
+from repro.serving.scheduler import (Request, shared_prefix_requests,
+                                     synthetic_requests)
+from repro.serving.speculation import (NGramDrafter, NullDrafter,
+                                       SpeculationConfig, sample_targets)
+
+from test_serving import _assert_results_identical, _serve_cm
+
+
+def _run(reqs, *, capture=True, **kw):
+    cm, params = _serve_cm()
+    ekw = dict(max_batch=4, max_seq_len=64, block_size=8,
+               capture_logits=capture)
+    ekw.update(kw)
+    eng = Engine(cm, params, EngineConfig(**ekw))
+    return eng, eng.run(reqs)
+
+
+def _reqs(n=6, prompt_len=12, max_new=16, seed=3):
+    cm, _ = _serve_cm()
+    return synthetic_requests(n, cm.cfg.vocab_size, prompt_len=prompt_len,
+                              max_new_tokens=max_new, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# config + drafter units
+# ---------------------------------------------------------------------------
+
+def test_speculation_config_parse():
+    assert SpeculationConfig.parse("off") is None
+    assert SpeculationConfig.parse("") is None
+    sp = SpeculationConfig.parse("ngram:6")
+    assert (sp.kind, sp.draft_k) == ("ngram", 6)
+    assert SpeculationConfig.parse("null").draft_k == 4
+    sp = SpeculationConfig.parse("draft:gpt2:2")
+    assert (sp.kind, sp.draft_cfg, sp.draft_k) == ("draft", "gpt2", 2)
+    assert sp.describe() == "draft:gpt2:2"
+    with pytest.raises(ValueError):
+        SpeculationConfig.parse("draft:4")
+    with pytest.raises(ValueError):
+        SpeculationConfig.parse("ngram:4:9")
+
+
+def test_speculation_config_invariants():
+    with pytest.raises(ValueError, match="drafter kind"):
+        EngineConfig(speculation="bogus:4", max_seq_len=64, block_size=8)
+    with pytest.raises(ValueError, match="draft_k"):
+        EngineConfig(speculation=SpeculationConfig(draft_k=0),
+                     max_seq_len=64, block_size=8)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        EngineConfig(speculation="ngram:4", fori_seg=4,
+                     max_seq_len=64, block_size=8)
+    e = EngineConfig(speculation="ngram:4", max_seq_len=64, block_size=8)
+    assert isinstance(e.speculation, SpeculationConfig)
+    assert e.tick_buckets == (1, 5)
+    assert EngineConfig(max_seq_len=64, block_size=8).tick_buckets == (1,)
+
+
+def test_ngram_drafter_prompt_lookup():
+    d = NGramDrafter(max_n=3, min_n=1)
+    h = np.asarray([5, 1, 2, 3, 9, 7, 1, 2, 3], np.int32)
+    # trailing 3-gram [1,2,3] recurs at position 1; continuation is 9, 7, 1
+    np.testing.assert_array_equal(d.propose(h, 3), [9, 7, 1])
+    # a continuation that runs off the history end extends by re-lookup
+    # over the drafted tokens: a period-1 cycle drafts all k
+    np.testing.assert_array_equal(
+        d.propose(np.asarray([4, 4], np.int32), 5), [4, 4, 4, 4, 4])
+    # period-2 cycle likewise continues the alternation
+    np.testing.assert_array_equal(
+        d.propose(np.asarray([6, 2, 6, 2, 6], np.int32), 4), [2, 6, 2, 6])
+    assert d.propose(np.asarray([8], np.int32), 4).size == 0
+    assert NullDrafter().propose(h, 4).size == 0
+    with pytest.raises(ValueError):
+        NGramDrafter(max_n=2, min_n=3)
+
+
+def test_sample_targets_is_counter_mode():
+    """Each (serial, commit-index) cell draws with its own folded key —
+    independent of the tick's column packing."""
+    rng = np.random.RandomState(0)
+    lg = jnp.asarray(rng.randn(2, 3, 17), jnp.float32)
+    key = jax.random.key(9)
+    out = np.asarray(sample_targets(lg, key, jnp.asarray([4, 7]),
+                                    jnp.asarray([0, 5]), 0.7))
+    for i, (serial, t0) in enumerate([(4, 0), (7, 5)]):
+        rk = jax.random.fold_in(key, serial)
+        for c in range(3):
+            want = jax.random.categorical(jax.random.fold_in(rk, t0 + c),
+                                          lg[i, c] / 0.7)
+            assert out[i, c] == int(want)
+    # the same cell sampled in a different packing yields the same token
+    shifted = np.asarray(sample_targets(lg[:, 1:], key, jnp.asarray([4, 7]),
+                                        jnp.asarray([1, 6]), 0.7))
+    np.testing.assert_array_equal(out[:, 1:], shifted)
+
+
+# ---------------------------------------------------------------------------
+# exactness gates
+# ---------------------------------------------------------------------------
+
+def test_greedy_ngram_matches_host_loop_byte_identical():
+    reqs = _reqs()
+    _, base = _run(reqs)
+    eng, spec = _run(reqs, speculation="ngram:4")
+    _assert_results_identical(base, spec)
+    m = spec.metrics
+    assert m["speculation"] and m["spec_drafter"] == "ngram:4"
+    assert m["spec_tokens_drafted"] > 0
+    # the pool never leaks under partial acceptance
+    assert eng.last_cache.pool.used_blocks == 0
+    eng.last_cache.ledger.check()
+
+
+@pytest.mark.parametrize("extra", [
+    {"prefix_cache": True},
+    {"prefix_cache": True, "chunked_prefill": True, "chunk_size": 4,
+     "chunk_buckets": (1, 4)},
+])
+def test_greedy_shared_prefix_with_cache_combos_byte_identical(extra):
+    """Speculation composed with prefix caching and chunked prefill (the
+    COW-heavy shared-prefix workload) stays byte-identical to the plain
+    host loop with the same toggles."""
+    cm, _ = _serve_cm()
+    reqs = shared_prefix_requests(6, cm.cfg.vocab_size, prefix_len=24,
+                                  tail_len=8, max_new_tokens=16, seed=11)
+    _, base = _run(reqs, **extra)
+    eng, spec = _run(reqs, speculation="ngram:4", **extra)
+    _assert_results_identical(base, spec)
+    assert spec.metrics["spec_tokens_accepted"] > 0
+    assert eng.last_cache.pool.used_blocks == 0
+    eng.last_cache.ledger.check()
+
+
+def test_sampled_output_is_drafter_invariant():
+    """temperature > 0: the null drafter (no speculation ever accepted) and
+    the n-gram drafter must emit identical bytes — the rejection-sampling
+    identity plus per-request rng streams."""
+    reqs = _reqs(seed=5)
+    _, null = _run(reqs, capture=False, speculation="null:4",
+                   temperature=0.8, seed=13)
+    _, ngram = _run(reqs, capture=False, speculation="ngram:4",
+                    temperature=0.8, seed=13)
+    assert null.metrics["spec_tokens_drafted"] == 0
+    for rid, a in null.by_id.items():
+        assert a.tokens == ngram.by_id[rid].tokens, rid
+
+
+class OracleDrafter:
+    """Replays a previous run's exact outputs: every draft is accepted."""
+    kind = "oracle"
+
+    def __init__(self, report, requests):
+        by_id = report.by_id
+        self.streams = [(np.asarray(r.prompt, np.int32),
+                         np.asarray(by_id[r.rid].tokens, np.int32))
+                        for r in requests]
+
+    def propose(self, history, k):
+        h = np.asarray(history, np.int32)
+        for p, t in self.streams:
+            if h.size >= p.size and np.array_equal(h[:p.size], p):
+                done = h.size - p.size
+                return t[done:done + k]
+        return np.empty(0, np.int32)
+
+
+def test_oracle_accept_all_greedy_fewer_syncs_same_bytes():
+    reqs = _reqs(max_new=20)
+    _, base = _run(reqs, capture=False)
+    cm, params = _serve_cm()
+    eng = Engine(cm, params, EngineConfig(max_batch=4, max_seq_len=64,
+                                          block_size=8, speculation="ngram:4"))
+    eng.drafter_override = OracleDrafter(base, reqs)
+    spec = eng.run(reqs)
+    m = spec.metrics
+    assert m["spec_acceptance_rate"] == 1.0
+    assert m["spec_rollback_tokens"] == 0
+    assert m["host_syncs"] < base.metrics["host_syncs"]
+    for rid, a in base.by_id.items():
+        assert a.tokens == spec.by_id[rid].tokens, rid
+
+
+def test_oracle_accept_all_sampled_rng_stream_parity():
+    """The accept-all path consumes the SAME rng stream positions as the
+    one-token path: an oracle replay of a sampled null-drafter run must
+    reproduce its bytes exactly while committing many tokens per tick."""
+    reqs = _reqs(max_new=20, seed=8)
+    _, null = _run(reqs, capture=False, speculation="null:4",
+                   temperature=0.7, seed=21)
+    cm, params = _serve_cm()
+    eng = Engine(cm, params, EngineConfig(max_batch=4, max_seq_len=64,
+                                          block_size=8, speculation="ngram:4",
+                                          temperature=0.7, seed=21))
+    eng.drafter_override = OracleDrafter(null, reqs)
+    spec = eng.run(reqs)
+    assert spec.metrics["spec_acceptance_rate"] == 1.0
+    for rid, a in null.by_id.items():
+        assert a.tokens == spec.by_id[rid].tokens, rid
+
+
+# ---------------------------------------------------------------------------
+# controls, counters, drafters-through-the-engine
+# ---------------------------------------------------------------------------
+
+def test_per_request_speculate_toggle_and_counters():
+    reqs = _reqs(n=4, max_new=12)
+    off = [Request(rid=r.rid, prompt=r.prompt,
+                   max_new_tokens=r.max_new_tokens, speculate=False)
+           for r in reqs]
+    eng, rep_off = _run(off, capture=False, speculation="ngram:4")
+    assert rep_off.metrics["spec_tokens_drafted"] == 0
+    _, rep_on = _run(reqs, capture=False, speculation="ngram:4")
+    m = rep_on.metrics
+    assert m["spec_tokens_drafted"] == \
+        sum(r.tokens_drafted for r in rep_on.results)
+    assert m["spec_tokens_accepted"] == \
+        sum(r.tokens_accepted for r in rep_on.results)
+    for r in rep_on.results:
+        assert 0 <= r.tokens_accepted <= r.tokens_drafted
+        if r.tokens_drafted:
+            assert r.acceptance_rate == r.tokens_accepted / r.tokens_drafted
+    assert "speculation: ngram:4" in rep_on.describe()
+    assert "spec=ngram:4" in eng.describe()
+
+
+def test_draft_model_drafter_end_to_end_greedy_parity():
+    """The small-model drafter (here: the same smoke config drafting for
+    itself) runs the full compile-propose-verify path and stays exact."""
+    reqs = _reqs(n=3, max_new=10)
+    _, base = _run(reqs)
+    _, spec = _run(reqs, speculation="draft:llama3.2-1b:2")
+    _assert_results_identical(base, spec)
+    assert spec.metrics["spec_drafter"] == "draft:llama3.2-1b:2"
+    assert spec.metrics["spec_tokens_drafted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ledger rollback accounting
+# ---------------------------------------------------------------------------
+
+def test_ledger_spec_rollback_undoes_fork_and_restores_spare():
+    """A COW fork that served only rejected speculative writes is undone:
+    the chain repoints at the shared original and the charged spare comes
+    back; a fork that holds a committed token stays."""
+    led = BlockLedger(20, 3, 4, 4, prefix_cache=True)
+    p = np.arange(1, 8, dtype=np.int32)           # 7 tokens: 1.75 blocks
+    led.admit(0, p, 11)
+    led.register_prompt(0)
+    led.release(0)                  # full + partial tail blocks indexed
+    for slot in (1, 2):             # two hits share the parked partial
+        m = led.match_and_lock(p)
+        assert m is not None and m.covered == 6 and m.needs_cow_spare
+        led.admit(slot, p, 11, match=m)
+    assert led.needs_fork(1)
+
+    led.spec_begin(1)
+    ci, old, new = led.fork(1)
+    led.note_write(1, 2)
+    assert led.spec_commit(1, 0) == 2             # reject everything
+    assert led.chains[1][ci] == old               # chain repointed back
+    assert led.spares[1] == new                   # charged spare restored
+    assert led.spec_fork_undos == 1
+    assert led.spec_rollback_tokens == 2
+    assert led.lens[1] == 6
+    led.check()
+
+    led.spec_begin(1)                             # partial acceptance
+    ci2, _, new2 = led.fork(1)
+    led.note_write(1, 2)
+    assert led.spec_commit(1, 1) == 1
+    assert led.chains[1][ci2] == new2             # committed K/V: fork stays
+    assert led.spares[1] is None
+    assert led.spec_fork_undos == 1
+    assert led.lens[1] == 7
+    led.check()
+
+    led.release(1)
+    led.release(2)
+    led.check()
+    assert led.pool.used_blocks == 0
+
+
+def test_spec_window_protocol_errors():
+    led = BlockLedger(20, 2, 4, 4, prefix_cache=False)
+    with pytest.raises(RuntimeError, match="empty"):
+        led.spec_begin(0)
+    led.admit(0, np.asarray([1, 2, 3], np.int32), 6)
+    led.spec_begin(0)
+    with pytest.raises(RuntimeError, match="already"):
+        led.spec_begin(0)
+    led.note_write(0, 2)
+    with pytest.raises(ValueError, match="outside"):
+        led.spec_commit(0, 3)
+    with pytest.raises(RuntimeError, match="no open"):
+        led.spec_commit(1, 0)
