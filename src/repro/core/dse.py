@@ -28,6 +28,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig, TuningConfig
+from repro.obs import TRACER
 from repro.core import estimator
 
 # default budget = TuningConfig's (v5e); override via FlowConfig.tuning
@@ -321,7 +322,10 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
 
     from repro.analysis.rules import flow_knob_rejection
     from repro.core.passes.sharding import split_rejection_reason
+    sp_enum = TRACER.timed("dse.enumerate", cat="dse", arch=cfg.name,
+                           devices=devices)
     enumerated = enumerate_candidates(cfg, shape, flow0, space=space)
+    sp_enum.end(n=len(enumerated))
     # static knob screen (F501): a flow holding a value no pass or registry
     # accepts would crash the builder or the compiler — drop it before any
     # plan is built.  Unlike the mesh screen this is never readmitted.
@@ -356,11 +360,13 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
         # readmit everything and let the estimator ranking decide.
         survivors, n_rejected = statically_valid, 0
     cands: List[Candidate] = []
+    sp_est = TRACER.timed("dse.estimate", cat="dse", n=len(survivors))
     for flow, knobs in survivors:
         fp = estimator.estimate_footprint(cfg, shape, flow, devices)
         st = estimator.estimate_step_seconds(cfg, shape, flow, devices)
         cands.append(Candidate(flow, knobs, fp["total"], st["step_s"],
                                st["bound"], fp["total"] < budget))
+    sp_est.end()
     fitting = [c for c in cands if c.fits]
     # stable sorts: enumeration order (defaults first) breaks ties.  When
     # nothing fits analytically, footprint (closest to fitting) leads.
@@ -384,7 +390,10 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
             if not _verify_plan(_bp(cfg, c.flow, shape)).ok:
                 n_static_pruned += 1
                 continue
+            sp_val = TRACER.timed("dse.validate", cat="dse",
+                                  knobs=c.knob_str())
             r = dict(validator(c.flow))
+            sp_val.end()
             r["knobs"] = c.knob_str()
             r["fits"] = bool(r["per_device_bytes"] < budget)
             validated.append(r)

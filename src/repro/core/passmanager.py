@@ -24,12 +24,12 @@ any sequence of passes.
 from __future__ import annotations
 
 import copy
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
 from repro.core.graph import Graph
+from repro.obs import TRACER
 
 
 @dataclass
@@ -135,9 +135,10 @@ class PassManager:
                 ctx.stats[p.name] = {"applied": False}
                 ctx.trace.append(f"skip {p.name}")
                 continue
-            t0 = time.perf_counter()
+            sp = TRACER.timed(f"pass.{p.name}", cat="pass", paper=p.paper)
             p.run(ctx)
-            dt_ms = (time.perf_counter() - t0) * 1e3
+            sp.end()
+            dt_ms = sp.elapsed_ms
             ctx.timings_ms[p.name] = round(dt_ms, 3)
             ctx.stats.setdefault(p.name, {}).setdefault("applied", True)
             ctx.trace.append(f"run {p.name} [{p.paper}] {dt_ms:.2f}ms")

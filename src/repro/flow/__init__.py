@@ -26,7 +26,6 @@ remain as deprecated shims.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
@@ -37,6 +36,7 @@ from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
 from repro.core import lowering
 from repro.core.plan import ExecutionPlan, _build_plan
 from repro.distributed.meshspec import MeshSpec
+from repro.obs import TRACER
 
 __all__ = ["compile", "CompiledModel", "MeshSpec"]
 
@@ -117,11 +117,11 @@ class CompiledModel:
         def fn(*args, **kw):
             st = self.stats["stages"]
             if name not in st:
-                t0 = time.perf_counter()
+                sp = TRACER.timed(f"stage.{name}", cat="stage")
                 out = jfn(*args, **kw)
                 jax.block_until_ready(out)
-                st[name] = {"first_call_s":
-                            round(time.perf_counter() - t0, 4)}
+                sp.end()
+                st[name] = {"first_call_s": round(sp.elapsed_s, 4)}
                 return out
             return jfn(*args, **kw)
         return fn
@@ -290,7 +290,8 @@ class CompiledModel:
         return out
 
     def measure(self, stage: Optional[str] = None, iters: int = 3, *,
-                seed: int = 0) -> Dict[str, Any]:
+                seed: int = 0, trace_dir: Optional[str] = None
+                ) -> Dict[str, Any]:
         """Wall-clock one stage of this compiled cell: AOT-compile it
         (recording ``per_device_bytes`` from ``memory_analysis()``), run it
         once to warm up, then time ``iters`` steps and report the best and
@@ -298,6 +299,10 @@ class CompiledModel:
         donated train step, prefill/decode -> the serving stages).  This is
         the DSE's measured-time validator (``validate="measure"``) — the
         on-device confirmation the paper got from hours of place & route.
+
+        ``trace_dir`` brackets the timed loop in ``jax.profiler.trace`` so
+        a device profile lines up with the host-side ``measure.step``
+        spans the module tracer records (``repro.obs``).
         """
         stage = stage if stage is not None else self.shape.kind
         B = self.shape.global_batch
@@ -340,21 +345,27 @@ class CompiledModel:
                              "expected train | prefill | decode")
 
         from repro.core.dse import per_device_bytes
-        t0 = time.perf_counter()
+        sp_compile = TRACER.timed("measure.compile", cat="measure",
+                                  stage=stage)
         with self._mesh_ctx():
             compiled = jax.jit(fn, donate_argnums=donate).lower(
                 *args).compile()
-        compile_s = time.perf_counter() - t0
+        sp_compile.end()
+        compile_s = sp_compile.elapsed_s
         mem = compiled.memory_analysis()
         args = carry(compiled(*args), args)          # warm-up (not timed)
         jax.block_until_ready(args)
         times = []
-        for _ in range(max(iters, 1)):
-            t0 = time.perf_counter()
-            out = compiled(*args)
-            jax.block_until_ready(out)
-            times.append(time.perf_counter() - t0)
-            args = carry(out, args)
+        prof_ctx = jax.profiler.trace(trace_dir) if trace_dir \
+            else _nullcontext()
+        with prof_ctx:
+            for _ in range(max(iters, 1)):
+                sp = TRACER.timed("measure.step", cat="measure", stage=stage)
+                out = compiled(*args)
+                jax.block_until_ready(out)
+                sp.end()
+                times.append(sp.elapsed_s)
+                args = carry(out, args)
         rec = {"stage": stage, "iters": len(times),
                "compile_s": round(compile_s, 4),
                "measured_step_s": min(times),
@@ -476,7 +487,8 @@ def compile(arch_or_cfg: Union[str, ModelConfig],
         flow = dataclasses.replace(flow, mesh_split=mesh_spec.axes)
 
     explore_result = None
-    t0 = time.perf_counter()
+    sp_build = TRACER.timed("flow.build", cat="compile", arch=cfg.name,
+                            autotune=autotune)
     if autotune:
         from repro.core import dse
         n_dev = mesh_spec.size if mesh_spec is not None else 1
@@ -505,6 +517,6 @@ def compile(arch_or_cfg: Union[str, ModelConfig],
         plan.verification = result
         if not result.ok:                   # gate: no jit for a bad plan
             raise PlanVerificationError(result)
-    build_s = time.perf_counter() - t0
+    sp_build.end()
     return CompiledModel(plan, mesh=mesh_obj, explore_result=explore_result,
-                         build_s=build_s)
+                         build_s=sp_build.elapsed_s)

@@ -32,6 +32,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
+from repro.obs import METRICS
+
 BACKENDS = ("ref", "pallas", "pallas_interpret", "auto")
 
 _ALIASES = {"reference": "ref", "ref": "ref", "pallas": "pallas",
@@ -237,6 +239,7 @@ def plan_kernel(plan, op: str, **facts) -> Optional[Tuple[Callable, bool]]:
     if reason is not None:
         key = (op, reason)
         DISPATCH_REJECTIONS[key] = DISPATCH_REJECTIONS.get(key, 0) + 1
+        METRICS.counter("kernels.dispatch.rejections").inc()
         return None
     return impl.fn, resolved == "pallas_interpret"
 

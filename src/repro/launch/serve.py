@@ -43,7 +43,8 @@ def _run_replay(args) -> None:
                         chunk_size=args.chunk_size,
                         chunked_prefill=args.chunked_prefill,
                         fori_seg=args.fori_seg,
-                        speculation=spec)
+                        speculation=spec,
+                        trace=args.trace is not None)
     if args.serving_autotune:
         from repro.serving.autotune import ServingProfile, autotune_decode
         prof = ServingProfile(name="cli",
@@ -56,6 +57,7 @@ def _run_replay(args) -> None:
         cm = at.compile()
         ecfg = at.engine_config(
             temperature=args.temperature,
+            trace=args.trace is not None,
             # explicit --prefix-cache / --no-prefix-cache overrides the
             # tuned pick; unset defers to the measured A/B
             prefix_cache=at.prefix_cache if args.prefix_cache is None
@@ -81,6 +83,19 @@ def _run_replay(args) -> None:
         reqs = load_requests_jsonl(args.requests, cm.cfg.vocab_size)
     report = eng.run(reqs)
     print(eng.describe())
+    if args.trace:
+        eng.tracer.to_chrome(args.trace)
+        print(f"wrote {len(eng.tracer)} trace events to {args.trace} "
+              "(load in Perfetto / chrome://tracing, or summarize with "
+              "python -m repro.launch.obs summarize)")
+    if args.metrics:
+        import json
+        snap = report.registry.snapshot() if report.registry is not None \
+            else dict(report.metrics)
+        with open(args.metrics, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(snap)} metrics to {args.metrics}")
     m = report.metrics
     if m["prefix_cache"]:
         print(f"prefix-cache hit rate: {m['prefix_hit_rate'] * 100:.1f}% "
@@ -154,6 +169,13 @@ def main():
     ap.add_argument("--validate", default="measure",
                     choices=("measure", "compile", "none"),
                     help="autotune ranking mode (--serving-autotune)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a per-tick span timeline (EngineConfig."
+                         "trace) and write it as Chrome trace-event JSON — "
+                         "loads in Perfetto; replay mode only")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the run's MetricsRegistry snapshot (dotted "
+                         "metric names) as JSON; replay mode only")
     ap.add_argument("--show", type=int, default=4,
                     help="requests to print after a replay")
     args = ap.parse_args()

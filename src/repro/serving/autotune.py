@@ -22,9 +22,8 @@ Usage::
 from __future__ import annotations
 
 import dataclasses
-import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +31,20 @@ import numpy as np
 
 from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
 from repro.core import dse
+from repro.obs import TRACER
+
+
+def _timed_runs(label: str, fn: Callable[[], Any], iters: int,
+                **attrs: Any) -> List[float]:
+    """Wall-clock ``fn`` ``iters`` times through the module tracer (one
+    ``autotune`` span per run when tracing is on)."""
+    ts = []
+    for _ in range(max(iters, 1)):
+        sp = TRACER.timed(label, cat="autotune", **attrs)
+        fn()
+        sp.end()
+        ts.append(sp.elapsed_s)
+    return ts
 
 
 @dataclass(frozen=True)
@@ -230,11 +243,10 @@ def tune_block_size(cfg: ModelConfig, profile: ServingProfile, *,
                           ref(q, kp, vp, bt, ln,
                               compute_dtype=jnp.float32))
         jax.block_until_ready(run(q, kp, vp, bt, lens))    # compile + warm
-        ts = []
-        for _ in range(max(iters, 1)):
-            t0 = time.perf_counter()
-            jax.block_until_ready(run(q, kp, vp, bt, lens))
-            ts.append(time.perf_counter() - t0)
+        ts = _timed_runs(
+            "autotune.block_size",
+            lambda: jax.block_until_ready(run(q, kp, vp, bt, lens)),
+            iters, bs=bs)
         times[bs] = float(np.median(ts) * 1e6)
     best = min(sorted(times, reverse=True), key=lambda b: times[b])
     return best, times
@@ -281,11 +293,10 @@ def tune_chunk_size(cfg: ModelConfig, profile: ServingProfile, *,
                           fn(q, kp, vp, bt, ln, qpos=qp,
                              compute_dtype=jnp.float32))
         jax.block_until_ready(run(q, kp, vp, bt, lens, qpos))
-        ts = []
-        for _ in range(max(iters, 1)):
-            t0 = time.perf_counter()
-            jax.block_until_ready(run(q, kp, vp, bt, lens, qpos))
-            ts.append(time.perf_counter() - t0)
+        ts = _timed_runs(
+            "autotune.chunk_size",
+            lambda: jax.block_until_ready(run(q, kp, vp, bt, lens, qpos)),
+            iters, k=k)
         times[k] = float(np.median(ts) * 1e6 / k)      # per catch-up token
     best = min(sorted(times, reverse=True), key=lambda k: times[k])
     return best, times
@@ -325,11 +336,8 @@ def tune_fori_seg(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
         eng = Engine(cm, params,
                      at.engine_config(fori_seg=seg, prompt_buckets=buckets))
         eng.run(reqs)                         # warm the tick programs
-        ts = []
-        for _ in range(max(iters, 1)):
-            t0 = time.perf_counter()
-            eng.run(reqs)
-            ts.append(time.perf_counter() - t0)
+        ts = _timed_runs("autotune.fori_seg", lambda: eng.run(reqs),
+                         iters, seg=seg)
         times[str(seg)] = float(np.median(ts))
     best = min(sorted(cands, reverse=True), key=lambda s: times[str(s)])
     return best, times
@@ -377,11 +385,8 @@ def tune_prefix_cache(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
                      at.engine_config(prefix_cache=toggle,
                                       prompt_buckets=buckets))
         eng.run(reqs)                         # warm the tick programs
-        ts = []
-        for _ in range(max(iters, 1)):
-            t0 = time.perf_counter()
-            eng.run(reqs)
-            ts.append(time.perf_counter() - t0)
+        ts = _timed_runs("autotune.prefix_cache", lambda: eng.run(reqs),
+                         iters, toggle=toggle)
         times[label] = float(np.median(ts))
     return times["on"] <= times["off"], times
 
@@ -431,11 +436,8 @@ def tune_speculation(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
         eng = Engine(cm, params,
                      at.engine_config(prompt_buckets=buckets, **kw))
         eng.run(reqs)                         # warm the tick programs
-        ts = []
-        for _ in range(max(iters, 1)):
-            t0 = time.perf_counter()
-            eng.run(reqs)
-            ts.append(time.perf_counter() - t0)
+        ts = _timed_runs("autotune.speculation", lambda: eng.run(reqs),
+                         iters, k=k)
         times[label(k)] = float(np.median(ts))
     best = min(sorted(ks, reverse=True), key=lambda k: times[label(k)])
     return (f"ngram:{best}" if best else None), times

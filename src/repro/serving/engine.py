@@ -39,10 +39,10 @@ byte-identical to it:
 """
 from __future__ import annotations
 
-import math
 import time
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core.plan import ExecutionPlan
 from repro.flow import CompiledModel
+from repro.obs import MetricsRegistry, Tracer
 from repro.serving.kvcache import (PagedKVCache, blocks_for_tokens,
                                    merge_state, slice_state)
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
@@ -112,6 +113,14 @@ class EngineConfig:
     speculation: Optional[Any] = None
     # debugging/parity: keep the sampled-step logits on each RequestResult
     capture_logits: bool = False
+    # observability: record a per-tick span timeline (phase, batch bucket,
+    # queue depth, pool occupancy, host-sync count) into the engine's
+    # Tracer ring buffer — export with launch/serve.py --trace or
+    # Engine.tracer.to_chrome().  Off by default; the disabled path is one
+    # boolean check per span site, and outputs are byte-identical either
+    # way (tracing never touches sampling, scheduling, or device state).
+    trace: bool = False
+    trace_max_events: int = 65536
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -191,9 +200,15 @@ class EngineConfig:
 
 @dataclass
 class RunReport:
-    """Engine.run outcome: per-request results plus loop-level metrics."""
+    """Engine.run outcome: per-request results plus loop-level metrics.
+
+    ``metrics`` keeps its historical flat key schema (pinned by
+    ``tests/test_bench_schema.py``) but is assembled from ``registry`` — a
+    per-run :class:`~repro.obs.MetricsRegistry` snapshot under stable
+    dotted names (``serving.prefix.hits``, ``pool.blocks.live``, …)."""
     results: List[RequestResult]
     metrics: Dict[str, Any]
+    registry: Optional[MetricsRegistry] = field(default=None, repr=False)
 
     @property
     def by_id(self) -> Dict[Any, RequestResult]:
@@ -242,7 +257,8 @@ class RunReport:
 
 class Engine:
     def __init__(self, compiled: Union[CompiledModel, ExecutionPlan], params,
-                 ecfg: Optional[EngineConfig] = None, mesh=None):
+                 ecfg: Optional[EngineConfig] = None, mesh=None,
+                 clock: Optional[Callable[[], float]] = None):
         if isinstance(compiled, ExecutionPlan):   # legacy plan-based wiring
             compiled = CompiledModel.from_plan(compiled, mesh=mesh)
         elif mesh is not None and mesh is not compiled.mesh:
@@ -254,6 +270,14 @@ class Engine:
         self.params = params
         self.ecfg = ecfg if ecfg is not None else EngineConfig()
         self.mesh = compiled.mesh
+        # one clock drives wall_s, latency/TTFT (through the Scheduler) and
+        # the span timeline, so an injected clock makes every timing in the
+        # report deterministic under test
+        self.clock: Callable[[], float] = \
+            clock if clock is not None else time.perf_counter
+        self.tracer = Tracer(enabled=self.ecfg.trace,
+                             max_events=self.ecfg.trace_max_events,
+                             clock=self.clock)
         self.last_report: Optional[RunReport] = None
         self.last_cache: Optional[PagedKVCache] = None
         # speculative decoding: the drafter is built lazily on first use (a
@@ -315,7 +339,7 @@ class Engine:
         cache = self.new_cache()
         self.last_cache = cache
         sched = Scheduler(e.max_batch, e.block_size, cache.pool,
-                          max_seq_len=e.max_seq_len,
+                          max_seq_len=e.max_seq_len, clock=self.clock,
                           prefix=cache if e.prefix_cache else None,
                           chunk_prefill=e.chunked_prefill)
         for r in requests:
@@ -351,22 +375,46 @@ class Engine:
         tokens_drafted = tokens_accepted = spec_ticks = 0
 
         rng = jax.random.key(e.seed)
-        t0 = time.perf_counter()
+        tr = self.tracer
+        tr.clear()
+        # per-run metrics registry: pool-occupancy gauges are set at the
+        # same three sites that tracked peak_used/peak_live before (the
+        # gauge keeps the peak), counters are published once after the loop
+        reg = MetricsRegistry()
+        g_pool_live = reg.gauge("pool.blocks.live")
+        g_pool_cached = reg.gauge("pool.blocks.cached")
+        g_pool_free = reg.gauge("pool.blocks.free")
+        g_live_tokens = reg.gauge("pool.tokens.live")
+
+        def note_pool():
+            g_pool_live.set(cache.pool.used_blocks)
+            g_pool_cached.set(cache.pool.cached_blocks)
+            g_pool_free.set(cache.pool.free_blocks)
+            g_live_tokens.set(cache.live_tokens())
+
+        t0 = self.clock()
         ticks = prefill_batches = 0
-        peak_used = peak_live = 0
         prefill_tokens = catchup_tokens = prompt_tokens_total = 0
         host_syncs = fori_segments = 0
 
         def evict_finished():
+            sp = tr.span("evict", cat="sub")
+            n = 0
             for sidx in sched.finished():
                 cache.evict(sidx)
                 sched.evict(sidx)
+                n += 1
+            sp.end(evicted=n)
 
+        run_sp = tr.span("engine.run", cat="run", requests=len(requests),
+                         max_batch=e.max_batch)
         while sched.has_work():
             # 1. admit into freed slots: prefix-cache hits seed their block
             #    tables from shared blocks (the uncovered tail catches up
             #    through decode ticks); the rest take the bucketed
             #    left-padded prefill
+            sp_admit = tr.span("tick.admit", cat="phase", phase="admit",
+                               queue=len(sched.queue))
             admitted = sched.admissions()
             prompt_tokens_total += sum(a.request.prompt_len for a in admitted)
             for a in admitted:
@@ -391,6 +439,8 @@ class Engine:
                 Bp = bucket_for(len(adm), e.batch_buckets)
                 Sp = bucket_for(max(a.request.prompt_len for a in adm),
                                 e.prompt_buckets)
+                sp_prefill = tr.span("prefill", cat="sub", batch=Bp,
+                                     bucket=Sp, n=len(adm))
                 if Sp > self.plan.cache_len:
                     raise ValueError(
                         f"prompt bucket {Sp} exceeds the compiled cell's "
@@ -440,9 +490,20 @@ class Engine:
                     sched.record_token(a.slot, int(toks[i]), first=True)
                 prefill_batches += 1
                 prefill_tokens += sum(a.request.prompt_len for a in adm)
-                peak_used = max(peak_used, cache.pool.used_blocks)
-                peak_live = max(peak_live, cache.live_tokens())
+                sp_prefill.end()
+                note_pool()
                 evict_finished()
+            if tr.enabled:
+                # queue blocked with nothing admitted: name the bottleneck
+                stall = None
+                if sched.queue and not admitted:
+                    stall = "no-free-slot" \
+                        if not any(s.free for s in sched.slots) \
+                        else "no-free-kv-blocks"
+                sp_admit.end(admitted=len(admitted),
+                             pool_live=cache.pool.used_blocks,
+                             pool_free=cache.pool.free_blocks,
+                             **({"stall": stall} if stall else {}))
 
             # 2. advance the occupied slots (batch-bucketed): a host-free
             #    fori segment when nothing can interrupt it, otherwise one
@@ -468,7 +529,12 @@ class Engine:
                     and rem >= e.fori_seg \
                     and not any(sched.slots[i].pending for i in active):
                 T = e.fori_seg
+                sp_fori = tr.span("tick.fori", cat="phase",
+                                  phase="decode-fori", batch=B, seg=T,
+                                  queue=len(sched.queue))
+                sp_cow = tr.span("cow-fork", cat="sub")
                 cache.prepare_decode(active)   # COW forks before any write
+                sp_cow.end()
                 tok0 = np.zeros(B, np.int32)
                 pos0 = np.zeros(B, np.int32)
                 for i in active:
@@ -494,9 +560,11 @@ class Engine:
                             break
                 ticks += T
                 fori_segments += 1
-                peak_used = max(peak_used, cache.pool.used_blocks)
-                peak_live = max(peak_live, cache.live_tokens())
+                note_pool()
                 evict_finished()
+                if tr.enabled:
+                    sp_fori.end(pool_live=cache.pool.used_blocks,
+                                host_syncs=host_syncs)
                 continue
 
             # 2b. one decode tick over the occupied slots.  Slots catching
@@ -507,6 +575,8 @@ class Engine:
             #     instead carry a verify row [last_token, d_1..d_j]: every
             #     column scores in the same cell, acceptance is decided on
             #     the host, and the ledger rolls rejected columns back.
+            sp_tick = tr.span("tick.decode", cat="phase", phase="decode",
+                              batch=B, queue=len(sched.queue))
             proposals: Dict[int, np.ndarray] = {}
             if spec_on:
                 for i in active:
@@ -531,11 +601,20 @@ class Engine:
                     if d.size:
                         proposals[i] = d
                         cache.spec_begin(i)
+            sp_cow = tr.span("cow-fork", cat="sub")
             cache.prepare_decode(active)       # COW forks before any write
+            sp_cow.end()
             need = max((len(proposals[i]) + 1 if i in proposals
                         else min(len(sched.slots[i].pending), e.chunk_size)
                         for i in active), default=1)
             k_tick = bucket_for(max(need, 1), e.tick_buckets)
+            if tr.enabled:
+                sp_tick.set(
+                    k=k_tick,
+                    phase=("spec-verify" if proposals else
+                           "chunked-prefill" if any(
+                               sched.slots[i].pending for i in active)
+                           else "decode"))
             fills: Dict[int, int] = {}
             if k_tick > 1:
                 tokens = np.zeros((B, k_tick), np.int32)
@@ -673,71 +752,106 @@ class Engine:
             if proposals:
                 spec_ticks += 1
             ticks += 1
-            peak_used = max(peak_used, cache.pool.used_blocks)
-            peak_live = max(peak_live, cache.live_tokens())
+            note_pool()
             evict_finished()
+            if tr.enabled:
+                sp_tick.end(pool_live=cache.pool.used_blocks,
+                            host_syncs=host_syncs)
 
-        wall = time.perf_counter() - t0
+        run_sp.end(ticks=ticks, host_syncs=host_syncs)
+        wall = self.clock() - t0
         results = sched.results
-        lats = sorted(r.latency_s for r in results) or [0.0]
-        ttfts = sorted(r.ttft_s for r in results) or [0.0]
-
-        def pct(xs, p):
-            return xs[min(len(xs) - 1, int(math.ceil(p * len(xs))) - 1)]
-
         gen = sum(r.n_generated for r in results)
         led = cache.ledger
-        report = RunReport(results=results, metrics={
-            "n_requests": len(results),
-            "generated_tokens": gen,
-            "wall_s": wall,
-            "tokens_per_s": gen / wall if wall > 0 else float("inf"),
-            "p50_latency_s": pct(lats, 0.50),
-            "p95_latency_s": pct(lats, 0.95),
-            "p50_ttft_s": pct(ttfts, 0.50),
-            "p95_ttft_s": pct(ttfts, 0.95),
-            "decode_ticks": ticks,
-            "prefill_batches": prefill_batches,
-            # host-free / chunked loop accounting: host_syncs counts the
-            # device->host round-trips the loop performed (one per prefill
-            # sample, per tick sample, per fori segment)
+
+        # publish every loop counter into the per-run registry; the
+        # report's flat legacy keys are a view over the snapshot (the
+        # dotted names are the stable schema — README "Observability")
+        reg.counter("serving.requests").inc(len(results))
+        reg.counter("serving.tokens.generated").inc(gen)
+        reg.counter("serving.tokens.prompt").inc(prompt_tokens_total)
+        reg.counter("serving.tokens.prefill_computed").inc(
+            prefill_tokens + catchup_tokens)
+        reg.counter("serving.tokens.catchup").inc(catchup_tokens)
+        reg.counter("serving.ticks").inc(ticks)
+        reg.counter("serving.prefill.batches").inc(prefill_batches)
+        reg.counter("serving.fori.segments").inc(fori_segments)
+        # host_syncs counts the device->host round-trips the loop performed
+        # (one per prefill sample, per tick sample, per fori segment)
+        reg.counter("serving.host_syncs").inc(host_syncs)
+        reg.gauge("serving.wall_s").set(wall)
+        reg.gauge("serving.tokens_per_s").set(
+            gen / wall if wall > 0 else float("inf"))
+        reg.gauge("serving.host_syncs_per_token").set(
+            host_syncs / gen if gen else 0.0)
+        h_lat = reg.histogram("serving.latency_s")
+        h_ttft = reg.histogram("serving.ttft_s")
+        for r in results:
+            h_lat.observe(r.latency_s)
+            h_ttft.observe(r.ttft_s)
+        sched.publish_metrics(reg)
+        cache.pool.publish_metrics(reg)
+        led.publish_metrics(reg)
+        reg.gauge("pool.blocks.total").set(cache.num_blocks)
+        reg.gauge("pool.bytes").set(cache.pool_bytes())
+        reg.gauge("serving.prefix.hit_rate").set(
+            led.cached_tokens / prompt_tokens_total
+            if prompt_tokens_total else 0.0)
+        reg.counter("serving.spec.ticks").inc(spec_ticks)
+        reg.counter("serving.spec.tokens_drafted").inc(tokens_drafted)
+        reg.counter("serving.spec.tokens_accepted").inc(tokens_accepted)
+        reg.gauge("serving.spec.acceptance_rate").set(
+            tokens_accepted / tokens_drafted if tokens_drafted else 0.0)
+
+        snap = reg.snapshot()
+        report = RunReport(results=results, registry=reg, metrics={
+            "n_requests": snap["serving.requests"],
+            "generated_tokens": snap["serving.tokens.generated"],
+            "wall_s": snap["serving.wall_s"],
+            "tokens_per_s": snap["serving.tokens_per_s"],
+            "p50_latency_s": snap["serving.latency_s.p50"],
+            "p95_latency_s": snap["serving.latency_s.p95"],
+            "p50_ttft_s": snap["serving.ttft_s.p50"],
+            "p95_ttft_s": snap["serving.ttft_s.p95"],
+            "decode_ticks": snap["serving.ticks"],
+            "prefill_batches": snap["serving.prefill.batches"],
+            # serving-policy knobs echo straight from the config
             "chunk_size": e.chunk_size,
             "chunked_prefill": e.chunked_prefill,
             "fori_seg": e.fori_seg,
-            "fori_segments": fori_segments,
-            "host_syncs": host_syncs,
-            "host_syncs_per_token": host_syncs / gen if gen else 0.0,
-            "admissions": sched.n_admitted,
-            "evictions": sched.n_evicted,
-            "refills": sched.n_refills,
-            "pool_blocks": cache.num_blocks,
+            "fori_segments": snap["serving.fori.segments"],
+            "host_syncs": snap["serving.host_syncs"],
+            "host_syncs_per_token": snap["serving.host_syncs_per_token"],
+            "admissions": snap["serving.sched.admissions"],
+            "evictions": snap["serving.sched.evictions"],
+            "refills": snap["serving.sched.refills"],
+            "pool_blocks": snap["pool.blocks.total"],
             "block_size": e.block_size,
-            "peak_used_blocks": peak_used,
-            "peak_live_tokens": peak_live,
-            "pool_bytes": cache.pool_bytes(),
+            "peak_used_blocks": snap["pool.blocks.live.peak"],
+            "peak_live_tokens": snap["pool.tokens.live.peak"],
+            "pool_bytes": snap["pool.bytes"],
             # prefix-cache outcome (zeros when the toggle is off)
             "prefix_cache": e.prefix_cache,
-            "prefix_hits": led.hits,
-            "prefix_misses": led.misses,
-            "prefix_cached_tokens": led.cached_tokens,
-            "prefix_cache_evictions": led.cache_evictions,
-            "cow_forks": led.cow_forks,
-            "prompt_tokens_total": prompt_tokens_total,
-            "prefill_tokens_computed": prefill_tokens + catchup_tokens,
-            "catchup_tokens": catchup_tokens,
-            "prefix_hit_rate": (led.cached_tokens / prompt_tokens_total
-                                if prompt_tokens_total else 0.0),
+            "prefix_hits": snap["serving.prefix.hits"],
+            "prefix_misses": snap["serving.prefix.misses"],
+            "prefix_cached_tokens": snap["serving.prefix.cached_tokens"],
+            "prefix_cache_evictions": snap["serving.prefix.evictions"],
+            "cow_forks": snap["serving.prefix.cow_forks"],
+            "prompt_tokens_total": snap["serving.tokens.prompt"],
+            "prefill_tokens_computed":
+                snap["serving.tokens.prefill_computed"],
+            "catchup_tokens": snap["serving.tokens.catchup"],
+            "prefix_hit_rate": snap["serving.prefix.hit_rate"],
             # speculative-decoding outcome (off -> False + zeros)
             "speculation": spec_on,
             "spec_drafter": spec.describe() if spec_on else "off",
             "spec_draft_k": spec.draft_k if spec_on else 0,
-            "spec_ticks": spec_ticks,
-            "spec_tokens_drafted": tokens_drafted,
-            "spec_tokens_accepted": tokens_accepted,
-            "spec_acceptance_rate": (tokens_accepted / tokens_drafted
-                                     if tokens_drafted else 0.0),
-            "spec_rollback_tokens": led.spec_rollback_tokens,
-            "spec_fork_undos": led.spec_fork_undos,
+            "spec_ticks": snap["serving.spec.ticks"],
+            "spec_tokens_drafted": snap["serving.spec.tokens_drafted"],
+            "spec_tokens_accepted": snap["serving.spec.tokens_accepted"],
+            "spec_acceptance_rate": snap["serving.spec.acceptance_rate"],
+            "spec_rollback_tokens": snap["serving.spec.rollback_tokens"],
+            "spec_fork_undos": snap["serving.spec.fork_undos"],
         })
         self.last_report = report
         return report

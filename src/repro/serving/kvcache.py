@@ -54,6 +54,7 @@ import functools
 
 from repro.core.lowering import _op_state_shapes, _mk_state, unit_key
 from repro.core.plan import ExecutionPlan
+from repro.obs import MetricsRegistry
 from repro.serving.prefix import BlockHash, PrefixIndex, block_hashes
 
 TRASH_BLOCK = 0
@@ -131,6 +132,13 @@ class BlockPool:
     @property
     def cached_blocks(self) -> int:
         return len(self._lru)
+
+    def publish_metrics(self, reg: "MetricsRegistry") -> None:
+        """Publish pool occupancy + reclaim counters (``pool.blocks.*``)."""
+        reg.gauge("pool.blocks.live").set(self.used_blocks)
+        reg.gauge("pool.blocks.cached").set(self.cached_blocks)
+        reg.gauge("pool.blocks.free").set(self.free_blocks)
+        reg.counter("pool.cache_evictions").inc(self.n_cache_evictions)
 
     def can_allocate(self, n: int) -> bool:
         return n <= self.free_blocks
@@ -302,6 +310,18 @@ class BlockLedger:
     @property
     def cache_evictions(self) -> int:
         return self.pool.n_cache_evictions
+
+    def publish_metrics(self, reg: "MetricsRegistry") -> None:
+        """Publish prefix-cache and speculation outcomes under their
+        dotted names (``serving.prefix.*`` / ``serving.spec.*``)."""
+        reg.counter("serving.prefix.hits").inc(self.hits)
+        reg.counter("serving.prefix.misses").inc(self.misses)
+        reg.counter("serving.prefix.cached_tokens").inc(self.cached_tokens)
+        reg.counter("serving.prefix.evictions").inc(self.cache_evictions)
+        reg.counter("serving.prefix.cow_forks").inc(self.cow_forks)
+        reg.counter("serving.spec.rollback_tokens").inc(
+            self.spec_rollback_tokens)
+        reg.counter("serving.spec.fork_undos").inc(self.spec_fork_undos)
 
     # -- matching ------------------------------------------------------------
     def match_and_lock(self, prompt: np.ndarray) -> Optional[PrefixMatch]:

@@ -34,6 +34,7 @@ from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import MetricsRegistry
 from repro.serving.kvcache import BlockPool, blocks_for_tokens
 
 
@@ -188,6 +189,13 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(not s.free for s in self.slots)
+
+    def publish_metrics(self, reg: "MetricsRegistry") -> None:
+        """Publish the scheduling counters under their dotted names."""
+        reg.counter("serving.sched.submitted").inc(self.n_submitted)
+        reg.counter("serving.sched.admissions").inc(self.n_admitted)
+        reg.counter("serving.sched.evictions").inc(self.n_evicted)
+        reg.counter("serving.sched.refills").inc(self.n_refills)
 
     @property
     def active_slots(self) -> List[int]:

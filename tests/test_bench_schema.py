@@ -1,0 +1,96 @@
+"""Freeze the RunReport.metrics / BENCH_serving.json key schemas.
+
+Benchmark consumers (CI artifact diffs, the README tables, downstream
+plotting) key on these names; a silent rename between PRs corrupts every
+comparison.  Any intentional schema change must update this test in the
+same PR — that is the point.
+"""
+import os
+import sys
+
+import jax
+import pytest
+
+from repro import flow as rflow
+from repro.configs.base import FlowConfig, ShapeConfig
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import synthetic_requests
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+
+# the flat RunReport.metrics keys, exactly as every consumer sees them
+RUN_REPORT_KEYS = (
+    "n_requests", "generated_tokens", "wall_s", "tokens_per_s",
+    "p50_latency_s", "p95_latency_s", "p50_ttft_s", "p95_ttft_s",
+    "decode_ticks", "prefill_batches",
+    "chunk_size", "chunked_prefill", "fori_seg", "fori_segments",
+    "host_syncs", "host_syncs_per_token",
+    "admissions", "evictions", "refills",
+    "pool_blocks", "block_size", "peak_used_blocks", "peak_live_tokens",
+    "pool_bytes",
+    "prefix_cache", "prefix_hits", "prefix_misses", "prefix_cached_tokens",
+    "prefix_cache_evictions", "cow_forks", "prompt_tokens_total",
+    "prefill_tokens_computed", "catchup_tokens", "prefix_hit_rate",
+    "speculation", "spec_drafter", "spec_draft_k", "spec_ticks",
+    "spec_tokens_drafted", "spec_tokens_accepted", "spec_acceptance_rate",
+    "spec_rollback_tokens", "spec_fork_undos",
+)
+
+# the per-row metric columns of every BENCH_serving.json table
+BENCH_ROW_METRIC_KEYS = (
+    "tokens_per_s", "p50_latency_s", "p95_latency_s",
+    "p50_ttft_s", "p95_ttft_s", "evictions", "refills",
+    "prefix_hit_rate", "prefill_tokens_computed", "catchup_tokens",
+    "host_syncs", "host_syncs_per_token", "fori_segments")
+
+
+@pytest.fixture(scope="module")
+def report():
+    cm = rflow.compile("llama3.2-1b", ShapeConfig("serve", "decode", 64, 4),
+                       FlowConfig(mode="folded", precision="fp32"),
+                       smoke=True)
+    params = cm.init_params(jax.random.key(0))
+    eng = Engine(cm, params, EngineConfig(max_batch=4, max_seq_len=64))
+    reqs = synthetic_requests(4, cm.cfg.vocab_size, prompt_len=8,
+                              max_new_tokens=4)
+    return eng.run(reqs)
+
+
+def test_run_report_metric_keys_frozen(report):
+    assert tuple(report.metrics.keys()) == RUN_REPORT_KEYS
+
+
+def test_run_report_metric_types(report):
+    m = report.metrics
+    ints = ("n_requests", "generated_tokens", "decode_ticks",
+            "prefill_batches", "host_syncs", "admissions", "evictions",
+            "refills", "pool_blocks", "block_size", "peak_used_blocks",
+            "peak_live_tokens", "prefix_hits", "spec_tokens_drafted")
+    for k in ints:
+        assert isinstance(m[k], int), (k, type(m[k]))
+    floats = ("wall_s", "tokens_per_s", "p50_latency_s", "p95_latency_s",
+              "host_syncs_per_token", "prefix_hit_rate",
+              "spec_acceptance_rate")
+    for k in floats:
+        assert isinstance(m[k], float), (k, type(m[k]))
+    assert isinstance(m["prefix_cache"], bool)
+    assert isinstance(m["chunked_prefill"], bool)
+    assert isinstance(m["speculation"], bool)
+
+
+def test_bench_serving_row_schema_frozen(report):
+    import paper_tables
+    assert tuple(paper_tables._SERVING_METRIC_KEYS) == BENCH_ROW_METRIC_KEYS
+    row = paper_tables._serving_row("x", 4, report.metrics)
+    assert tuple(row.keys()) == ("name", "concurrency") + \
+        BENCH_ROW_METRIC_KEYS
+
+
+def test_bench_rows_derivable_from_registry_snapshot(report):
+    # BENCH_serving.json rows come from report.metrics, which is assembled
+    # from the registry snapshot — every row key must resolve through it
+    assert report.registry is not None
+    for k in BENCH_ROW_METRIC_KEYS:
+        assert k in report.metrics, k
