@@ -8,6 +8,7 @@ Table V   — comparison to frameworks   -> our flow vs hand-written jnp/XLA
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Tuple
 
@@ -356,6 +357,47 @@ def table9_speculation(n: int = 8) -> Dict:
     out["target_met"] = bool(out["tokens_match"]
                              and out["speedup"] >= out["target"])
     return out
+
+
+def table_tunedb_warmstart(db_path: str = None) -> Dict:
+    """Cold vs warm serving autotune through the persistent store
+    (repro.tunedb): the same ``autotune_decode`` twice against one fresh
+    db.  The cold run pays every per-bucket flow-search compile and every
+    microbench; the warm run serves exact-fingerprint records, so it must
+    measure zero flow candidates and pin a byte-identical flow and
+    EngineConfig.  Wall time and measured-candidate counts for both runs
+    land machine-readable in BENCH_serving.json."""
+    import tempfile
+    from repro.core import dse
+    from repro.serving.autotune import ServingProfile, autotune_decode
+    path = db_path if db_path is not None else os.path.join(
+        tempfile.mkdtemp(prefix="tunedb_bench"), "tune.jsonl")
+    prof = ServingProfile(name="bench", batch_buckets=(1, 2), max_seq_len=64,
+                          block_sizes=(8, 16), chunk_sizes=(1, 2),
+                          fori_segs=(0, 4), spec_ks=(0, 2))
+
+    def run():
+        t0 = time.perf_counter()
+        at = autotune_decode("llama3.2-1b", smoke=True, profile=prof,
+                             validate="compile", use_cache=False, db=path)
+        return time.perf_counter() - t0, at
+
+    dse.clear_explore_cache()
+    cold_s, at_cold = run()
+    warm_s, at_warm = run()
+    return {
+        "db": path,
+        "cold_tuning_s": cold_s,
+        "warm_tuning_s": warm_s,
+        "speedup": cold_s / max(warm_s, 1e-9),
+        "cold_measured": at_cold.n_measured,
+        "warm_measured": at_warm.n_measured,
+        "warm_statuses": {str(b): s
+                          for b, s in at_warm.tunedb_statuses.items()},
+        "flow_identical": at_cold.flow_for() == at_warm.flow_for(),
+        "engine_config_identical":
+            at_cold.engine_config() == at_warm.engine_config(),
+    }
 
 
 def table5_comparison() -> List[Tuple]:

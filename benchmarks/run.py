@@ -19,12 +19,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 REPO = os.path.join(os.path.dirname(__file__), "..")
 
 
-def serving_tables(T, concurrencies=(1, 4, 16)) -> dict:
-    """Table 9 + the mixed-traffic and speculation A/Bs, as one payload."""
+def serving_tables(T, concurrencies=(1, 4, 16), tune_db=None) -> dict:
+    """Table 9 + the mixed-traffic and speculation A/Bs + the tunedb
+    cold-vs-warm autotune comparison, as one payload."""
     table9 = T.table9_serving(concurrencies)
     mixed = T.table9_mixed_traffic()
     spec = T.table9_speculation()
-    return {"table9": table9, "mixed_traffic": mixed, "speculation": spec}
+    tunedb = T.table_tunedb_warmstart(tune_db)
+    return {"table9": table9, "mixed_traffic": mixed, "speculation": spec,
+            "tunedb_warmstart": tunedb}
 
 
 def print_serving(doc: dict) -> None:
@@ -67,6 +70,15 @@ def print_serving(doc: dict) -> None:
           f"tokens_match={sp['tokens_match']};"
           f"speedup={sp['speedup']:.2f}x;"
           f"target={sp['target']:.1f}x;target_met={sp['target_met']}")
+    td = doc["tunedb_warmstart"]
+    print(f"tunedb/warmstart,{td['warm_tuning_s'] * 1e6:.0f},"
+          f"cold_s={td['cold_tuning_s']:.2f};"
+          f"warm_s={td['warm_tuning_s']:.2f};"
+          f"speedup={td['speedup']:.2f}x;"
+          f"cold_measured={td['cold_measured']};"
+          f"warm_measured={td['warm_measured']};"
+          f"flow_identical={td['flow_identical']};"
+          f"engine_config_identical={td['engine_config_identical']}")
 
 
 def main(argv=None) -> None:
@@ -75,6 +87,10 @@ def main(argv=None) -> None:
                     help="serving tables only (fast; the CI artifact step)")
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serving.json"),
                     help="path for the machine-readable serving benchmark")
+    ap.add_argument("--tune-db", default=None,
+                    help="persistent autotune store for the cold-vs-warm "
+                         "comparison (default: a fresh temp store; pass a "
+                         "path to seed/reuse one across runs)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables as T
@@ -110,7 +126,7 @@ def main(argv=None) -> None:
                   f"comm_bytes={comm:.3g}")
 
     doc = serving_tables(T, concurrencies=(1, 4) if args.smoke
-                         else (1, 4, 16))
+                         else (1, 4, 16), tune_db=args.tune_db)
     print_serving(doc)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)

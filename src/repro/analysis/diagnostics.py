@@ -52,6 +52,9 @@ DIAGNOSTIC_CODES: Dict[str, str] = {
     "M403": "pp factor invalid for this cell (non-train or uneven layers)",
     # flow-level knob screen (F) — the DSE's pre-plan static pruner
     "F501": "flow knob holds a value no pass or registry accepts",
+    # persistent autotune store (T) — repro.tunedb records
+    "T601": "tunedb record no longer verifies against the current plan "
+            "(stale knobs / search space / code version); re-measuring",
 }
 
 

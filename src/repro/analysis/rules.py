@@ -247,4 +247,20 @@ def flow_knob_rejection(flow: Any) -> Optional[str]:
     if flow.vmem_budget_bytes < 1:
         return (f"vmem_budget_bytes must be positive, got "
                 f"{flow.vmem_budget_bytes}")
+    if flow.tile_overrides is not None:
+        from repro.core.passes.tiling import TILE_KEYS
+        try:
+            pairs = tuple(flow.tile_overrides)
+        except TypeError:
+            return (f"tile_overrides must be a sequence of "
+                    f"(tile_key, tile) pairs, got "
+                    f"{flow.tile_overrides!r}")
+        for pair in pairs:
+            if not (isinstance(pair, (tuple, list)) and len(pair) == 2):
+                return (f"tile_overrides entries must be (tile_key, tile) "
+                        f"pairs, got {pair!r}")
+            key = pair[0]
+            if key not in TILE_KEYS:
+                return (f"tile_overrides key {key!r} is not a known tile "
+                        f"key {TILE_KEYS}")
     return None

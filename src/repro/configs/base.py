@@ -166,6 +166,12 @@ class TuningConfig:
     # from its ``devices`` argument; an explicit ``FlowConfig.mesh_split``
     # pins the factorization instead.
     mesh_devices: int = 0
+    # path of the persistent autotune database (repro.tunedb): measured DSE
+    # and serving-autotune results are written there and served back across
+    # processes (exact-fingerprint hits measure nothing; neighboring batch
+    # buckets warm-start).  None disables persistence; ``dse.explore(db=)``
+    # and ``autotune_decode(db=)`` override per call.
+    tune_db: Optional[str] = None
 
 
 @dataclass(frozen=True)
@@ -199,6 +205,13 @@ class FlowConfig:
     vmem_budget_bytes: int = 96 * 1024 * 1024  # v5e ~128MiB VMEM, leave headroom
     scan_unroll: int = 1
     ce_chunk: int = 256                # sequence-chunked CE logits block
+    # per-kernel Pallas tile-schedule overrides as ordered (tile_key, tile)
+    # pairs, e.g. (("attention", (128, 256)), ("conv2d", (16, 128))) — the
+    # sub-plan-level tunables the tunedb records and the serving autotune's
+    # tile microbench pins (KernelContract.tile_key names the join point).
+    # Applied by the TilingPass on top of its own selection; None keeps the
+    # selector's choices.
+    tile_overrides: Optional[Tuple[Tuple[str, Any], ...]] = None
     # design-space exploration (repro.core.dse)
     tuning: TuningConfig = TuningConfig()
 

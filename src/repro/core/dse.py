@@ -24,11 +24,15 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
+import warnings
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro import tunedb
 from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig, TuningConfig
-from repro.obs import TRACER
+from repro.obs import METRICS, TRACER
 from repro.core import estimator
 
 # default budget = TuningConfig's (v5e); override via FlowConfig.tuning
@@ -70,6 +74,10 @@ class ExploreResult:
     n_rejected: int = 0                  # uneven-shard candidates screened out
     n_static_pruned: int = 0             # statically-invalid candidates the
                                          # verifier dropped before any compile
+    n_measured: int = 0                  # validator invocations this search
+                                         # actually paid (0 on a tunedb hit)
+    tunedb_status: Optional[str] = None  # None (no db) | "hit" | "transfer"
+                                         # | "cold"
 
     def describe(self) -> str:
         c = self.best
@@ -78,7 +86,9 @@ class ExploreResult:
             f"enumerated={self.n_enumerated} rejected={self.n_rejected} "
             f"static_pruned={self.n_static_pruned} "
             f"pruned_to={len(self.candidates)} "
-            f"validated={len(self.validated)}",
+            f"validated={len(self.validated)}"
+            + (f" tunedb={self.tunedb_status} measured={self.n_measured}"
+               if self.tunedb_status else ""),
             f"  budget: {self.budget_bytes / 2 ** 30:.1f} GiB/device",
             f"  best: {c.knob_str()}",
             f"  est: footprint={c.footprint_bytes / 2 ** 30:.3f} GiB "
@@ -220,28 +230,78 @@ def measure_validator(cfg: ModelConfig, shape: ShapeConfig, *,
 # the explorer
 # ---------------------------------------------------------------------------
 
-# Completed searches keyed by (cfg, shape, flow, devices, top_k, space)
-# fingerprint — ``--autotune`` across serve/train/dryrun in one process pays
-# for each identical search once (ROADMAP "explorer caching across cells").
-_EXPLORE_CACHE: Dict[Tuple, ExploreResult] = {}
-_EXPLORE_CACHE_STATS = {"hits": 0, "misses": 0}
+# Completed searches keyed by (cfg, shape, flow, devices, platform, top_k,
+# space) fingerprint — ``--autotune`` across serve/train/dryrun in one
+# process pays for each identical search once (ROADMAP "explorer caching
+# across cells").  Bounded LRU: one entry per cfg×shape×flow×mesh×space
+# searched would otherwise grow without bound in a long-lived process.
+_EXPLORE_CACHE: "OrderedDict[Tuple, ExploreResult]" = OrderedDict()
+_EXPLORE_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_EXPLORE_CACHE_LIMIT = 64
+
+
+def set_explore_cache_limit(n: int) -> None:
+    """Bound the process-level explore cache to ``n`` results (LRU
+    eviction; default 64).  ``n <= 0`` disables caching entirely."""
+    global _EXPLORE_CACHE_LIMIT
+    _EXPLORE_CACHE_LIMIT = int(n)
+    while len(_EXPLORE_CACHE) > max(_EXPLORE_CACHE_LIMIT, 0):
+        _EXPLORE_CACHE.popitem(last=False)
+        _EXPLORE_CACHE_STATS["evictions"] += 1
+        METRICS.counter("dse.cache.evictions").inc()
+
+
+def _cache_get(fp_key: Tuple) -> Optional[ExploreResult]:
+    hit = _EXPLORE_CACHE.get(fp_key)
+    if hit is not None:
+        _EXPLORE_CACHE.move_to_end(fp_key)
+        _EXPLORE_CACHE_STATS["hits"] += 1
+        METRICS.counter("dse.cache.hits").inc()
+    else:
+        _EXPLORE_CACHE_STATS["misses"] += 1
+        METRICS.counter("dse.cache.misses").inc()
+    return hit
+
+
+def _cache_put(fp_key: Tuple, result: ExploreResult) -> None:
+    if _EXPLORE_CACHE_LIMIT <= 0:
+        return
+    _EXPLORE_CACHE[fp_key] = result
+    _EXPLORE_CACHE.move_to_end(fp_key)
+    while len(_EXPLORE_CACHE) > _EXPLORE_CACHE_LIMIT:
+        _EXPLORE_CACHE.popitem(last=False)
+        _EXPLORE_CACHE_STATS["evictions"] += 1
+        METRICS.counter("dse.cache.evictions").inc()
+
+
+def _platform_key() -> str:
+    """``"<backend>:<device kind>"`` of the default jax device.  Part of
+    every fingerprint (in-process cache AND persisted tunedb records):
+    flipping ``JAX_PLATFORMS`` (or CPU↔TPU in one process) must never serve
+    a result measured on the other platform."""
+    return tunedb.device_key()
 
 
 def _explore_fingerprint(cfg: ModelConfig, shape: ShapeConfig,
                          flow: FlowConfig, devices: int,
                          top_k: Optional[int],
                          space: Optional[Dict[str, Sequence[Any]]],
-                         validate_tag: str) -> Tuple:
+                         validate_tag: str,
+                         platform: Optional[str] = None) -> Tuple:
     space_key = None if space is None else tuple(
         sorted((k, tuple(v)) for k, v in space.items()))
     # cfg/shape/flow are frozen dataclasses (hashable); kernel_backend AND
     # the mesh topology (flow.mesh_split + tuning.mesh_devices, normalized
     # by explore() before fingerprinting) are part of flow, so a backend or
-    # mesh change in-process misses the cache as required.  ``validate_tag``
-    # ("none" | "compile" | "measure") keeps estimator-only results from
-    # answering for validated searches and compile-validated ones from
-    # answering for measured-time searches.
-    return (cfg, shape, flow, devices, top_k, space_key, validate_tag)
+    # mesh change in-process misses the cache as required.  ``platform``
+    # carries the jax backend *and* device kind — the device count alone
+    # used to be keyed, so a JAX_PLATFORMS flip served stale results.
+    # ``validate_tag`` ("none" | "compile" | "measure") keeps
+    # estimator-only results from answering for validated searches and
+    # compile-validated ones from answering for measured-time searches.
+    platform = platform if platform is not None else _platform_key()
+    return (cfg, shape, flow, devices, platform, top_k, space_key,
+            validate_tag)
 
 
 def explore_cache_stats() -> Dict[str, int]:
@@ -250,7 +310,90 @@ def explore_cache_stats() -> Dict[str, int]:
 
 def clear_explore_cache() -> None:
     _EXPLORE_CACHE.clear()
-    _EXPLORE_CACHE_STATS.update(hits=0, misses=0)
+    _EXPLORE_CACHE_STATS.update(hits=0, misses=0, evictions=0)
+
+
+# ---------------------------------------------------------------------------
+# persistent tunedb integration (repro.tunedb)
+# ---------------------------------------------------------------------------
+
+def _explore_db_key(cfg: ModelConfig, shape: ShapeConfig, flow: FlowConfig,
+                    devices: int, top_k: Optional[int],
+                    space: Optional[Dict[str, Sequence[Any]]],
+                    validate_tag: str, platform: str) -> Dict[str, Any]:
+    """The structured (JSON-safe) twin of :func:`_explore_fingerprint` for
+    persisted records — same facts, same poisoning fixes (platform/device
+    kind included)."""
+    space_enc = None if space is None else {
+        k: tuple(v) for k, v in sorted(space.items())}
+    return {"cfg": tunedb.config_facts(cfg),
+            "shape": tunedb.shape_facts(shape),
+            "flow": tunedb.flow_facts(flow),
+            "devices": devices, "platform": platform, "top_k": top_k,
+            "space": space_enc, "validate": validate_tag}
+
+
+def _stale_record_warning(reason: str) -> None:
+    """Surface a persisted record that no longer verifies against the
+    current plan as a T601 diagnostic (warning severity: the search simply
+    falls back to measuring) — the analysis-layer vocabulary for it."""
+    from repro.analysis import Diagnostic, WARNING
+    diag = Diagnostic("T601", WARNING, reason, where="tunedb")
+    warnings.warn(diag.format(), stacklevel=3)
+
+
+def _serve_exact_hit(rec, cfg: ModelConfig, shape: ShapeConfig,
+                     flow0: FlowConfig, pool: List[Candidate]
+                     ) -> Optional[Tuple[Candidate, List[Dict[str, Any]]]]:
+    """Reconstruct (winner, validated) from an exact-fingerprint record
+    without measuring anything.  Returns None — after a T601 warning — when
+    the stored winner no longer verifies against the current plan space
+    (knob vanished, plan now statically invalid, candidate no longer
+    enumerated), in which case the caller re-measures."""
+    try:
+        knobs = tuple((k, v) for k, v in
+                      tunedb.decode_value(rec.value["best_knobs"]))
+        best_flow = dataclasses.replace(flow0, **dict(knobs))
+    except (KeyError, TypeError, ValueError) as e:
+        _stale_record_warning(
+            f"record {rec.fingerprint[:12]} winner knobs no longer apply "
+            f"to FlowConfig ({e}); re-measuring")
+        return None
+    best = next((c for c in pool if c.flow == best_flow), None)
+    if best is None:
+        _stale_record_warning(
+            f"record {rec.fingerprint[:12]} winner "
+            f"[{' '.join(f'{k}={v}' for k, v in knobs)}] is no longer an "
+            "enumerated candidate of the current search space; re-measuring")
+        return None
+    from repro.analysis import verify_plan as _verify_plan
+    from repro.core.plan import _build_plan as _bp
+    result = _verify_plan(_bp(cfg, best.flow, shape))
+    if not result.ok:
+        _stale_record_warning(
+            f"record {rec.fingerprint[:12]} winner plan fails static "
+            f"verification under the current code "
+            f"({result.summary_line()}); re-measuring")
+        return None
+    validated = [dict(v) for v in tunedb.decode_value(
+        rec.value.get("validated", []))]
+    return best, validated
+
+
+def _transfer_anchor(pool: List[Candidate], neighbor) -> Dict[str, float]:
+    """Per-knob anchor ratios from a neighboring record: the neighbor's
+    *measured* step time over its *estimated* step time, keyed by knob
+    string.  Multiplying this cell's estimates by the ratio re-anchors the
+    estimator ranking with transferred measurements — before any compile."""
+    est_nb = tunedb.decode_value(neighbor.value.get("est_by_knobs", {}))
+    ratios: Dict[str, float] = {}
+    for v in tunedb.decode_value(neighbor.value.get("validated", [])):
+        ks = v.get("knobs")
+        t = v.get("measured_step_s")
+        e = est_nb.get(ks)
+        if ks and t and e:
+            ratios[ks] = float(t) / float(e)
+    return ratios
 
 
 def explore(cfg: ModelConfig, shape: ShapeConfig,
@@ -261,7 +404,8 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
             space: Optional[Dict[str, Sequence[Any]]] = None,
             top_k: Optional[int] = None,
             rank_measured: bool = False,
-            use_cache: bool = True) -> ExploreResult:
+            use_cache: bool = True,
+            db: Any = None) -> ExploreResult:
     """Search the joint pass design space for the fastest candidate that
     fits the device budget.
 
@@ -288,11 +432,20 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
     fitting survivor wins.  Without a validator the estimator ranking
     decides alone.
 
-    Identical searches (same cfg/shape/base-flow/devices/mesh-topology
-    fingerprint) are served from a process-level cache — including their
-    recorded validations — so repeated ``--autotune`` invocations in one
-    process don't redo the sweep.  ``use_cache=False`` forces a fresh
-    search.
+    Identical searches (same cfg/shape/base-flow/devices/platform/
+    mesh-topology fingerprint) are served from a bounded process-level LRU
+    cache — including their recorded validations — so repeated
+    ``--autotune`` invocations in one process don't redo the sweep.
+    ``use_cache=False`` forces a fresh search.
+
+    ``db`` (a :class:`repro.tunedb.TuneDB` or a path; defaults to
+    ``flow0.tuning.tune_db``) adds the *persistent* layer: an
+    exact-fingerprint record serves the winner with **zero** measurements,
+    and when only a neighboring cell was tuned (same model/flow/device,
+    different batch bucket or seq rung) its measurements re-anchor the
+    estimator ranking so at most half the usual top-k survivors are
+    compiled (``ExploreResult.tunedb_status`` / ``n_measured`` report the
+    outcome).  Every validated search is written back to the store.
     """
     flow0 = base_flow if base_flow is not None else FlowConfig(mode="folded")
     if mesh is not None:
@@ -310,12 +463,19 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
                                               mesh_devices=devices))
     validate_tag = "none" if validator is None else \
         ("measure" if rank_measured else "compile")
+    platform = _platform_key()
     fp_key = _explore_fingerprint(cfg, shape, flow0, devices, top_k, space,
-                                  validate_tag)
-    if use_cache and fp_key in _EXPLORE_CACHE:
-        _EXPLORE_CACHE_STATS["hits"] += 1
-        return _EXPLORE_CACHE[fp_key]
-    _EXPLORE_CACHE_STATS["misses"] += 1
+                                  validate_tag, platform)
+    if use_cache:
+        hit = _cache_get(fp_key)
+        if hit is not None:
+            return hit
+    tdb = tunedb.open_db(db if db is not None else flow0.tuning.tune_db)
+    db_key = db_fp = None
+    if tdb is not None:
+        db_key = _explore_db_key(cfg, shape, flow0, devices, top_k, space,
+                                 validate_tag, platform)
+        db_fp = tunedb.fingerprint(db_key)
     tuning = flow0.tuning
     budget = tuning.hbm_bytes
     k = top_k if top_k is not None else tuning.top_k
@@ -378,12 +538,58 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
 
     validated: List[Dict[str, Any]] = []
     best = top[0]
-    if validator is not None:
+    n_measured = 0
+    tunedb_status: Optional[str] = None if tdb is None else "cold"
+    served = None
+    if tdb is not None:
+        sp_db = TRACER.timed("tunedb.lookup", cat="tunedb", kind="explore")
+        rec = tdb.get(db_fp)
+        if rec is not None:
+            served = _serve_exact_hit(rec, cfg, shape, flow0, pool)
+        sp_db.end(hit=served is not None)
+        if served is not None:
+            # exact-fingerprint hit: the persisted winner and its recorded
+            # measurements stand in for the whole validation phase — zero
+            # candidates measured
+            best, validated = served
+            tunedb_status = "hit"
+            METRICS.counter("tunedb.hits").inc()
+        else:
+            METRICS.counter("tunedb.misses").inc()
+    if served is None and validator is not None:
+        top_v = top
+        if tdb is not None:
+            # warm start: the nearest record that agrees on everything but
+            # the shape cell (same op shapes via cfg, different batch
+            # bucket / seq rung) re-anchors the estimator ranking with its
+            # measured/estimated ratios; only the anchored best half of the
+            # usual top-k then pays a compile
+            match = {kk: vv for kk, vv in db_key.items() if kk != "shape"}
+
+            def _dist(r) -> float:
+                s = r.key.get("shape", {})
+                return (abs(math.log2(max(int(s.get("global_batch", 1)), 1))
+                            - math.log2(max(shape.global_batch, 1)))
+                        + abs(math.log2(max(int(s.get("seq_len", 1)), 1))
+                              - math.log2(max(shape.seq_len, 1))))
+
+            nbs = tdb.neighbors("explore", match, exclude=db_fp,
+                                distance=_dist)
+            if nbs:
+                ratios = _transfer_anchor(pool, nbs[0])
+                anchored = [c for c in top if c.knob_str() in ratios]
+                if anchored:
+                    anchored.sort(key=lambda c:
+                                  (c.step_s * ratios[c.knob_str()],
+                                   c.footprint_bytes))
+                    top_v = anchored[:max(1, len(top) // 2)]
+                    tunedb_status = "transfer"
+                    METRICS.counter("tunedb.transfers").inc()
         from repro.analysis import verify_plan as _verify_plan
         from repro.core.plan import _build_plan as _bp
         chosen = None
         chosen_t = float("inf")
-        for c in top:
+        for c in top_v:
             # plan-level static gate: build (cheap, milliseconds) and verify
             # before paying a compile — an invalid plan never reaches the
             # validator
@@ -394,6 +600,7 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
                                   knobs=c.knob_str())
             r = dict(validator(c.flow))
             sp_val.end()
+            n_measured += 1
             r["knobs"] = c.knob_str()
             r["fits"] = bool(r["per_device_bytes"] < budget)
             validated.append(r)
@@ -407,16 +614,29 @@ def explore(cfg: ModelConfig, shape: ShapeConfig,
             chosen = c
             break                  # first fitting candidate wins; don't pay
                                    # further compiles for report decoration
-        best = chosen if chosen is not None else top[0]
+        best = chosen if chosen is not None else top_v[0] if top_v else top[0]
+    if served is None and tdb is not None:
+        # bank this search: the winner's knobs, every recorded measurement,
+        # and the estimator's predictions for the validated set (the anchor
+        # a neighboring bucket's warm start divides by)
+        tdb.put(tunedb.TuneRecord.make(
+            "explore", db_key,
+            {"best_knobs": best.knobs,
+             "validated": validated,
+             "est_by_knobs": {c.knob_str(): c.step_s for c in top},
+             "n_enumerated": len(enumerated),
+             "winner_step_s": best.step_s},
+            device=platform))
 
     from repro.core.plan import _build_plan
     plan = _build_plan(cfg, best.flow, shape)
     result = ExploreResult(best=best, plan=plan, candidates=pool,
                            n_enumerated=len(enumerated), validated=validated,
                            budget_bytes=budget, n_rejected=n_rejected,
-                           n_static_pruned=n_static_pruned)
+                           n_static_pruned=n_static_pruned,
+                           n_measured=n_measured, tunedb_status=tunedb_status)
     if use_cache:
-        _EXPLORE_CACHE[fp_key] = result
+        _cache_put(fp_key, result)
     return result
 
 

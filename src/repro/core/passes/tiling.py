@@ -78,10 +78,33 @@ def select_attention_tile(seq_q: int, seq_k: int, head_dim: int, *,
     return bq, bk
 
 
+#: Every key the tile table may carry — the valid targets of
+#: ``FlowConfig.tile_overrides`` (the flow-knob screen rejects others).
+TILE_KEYS = ("matmul", "attention", "decode_attention", "conv2d",
+             "wkv_chunk", "ce_chunk")
+
+
+def apply_overrides(tiles: Dict[str, object], flow) -> Dict[str, str]:
+    """Apply ``flow.tile_overrides`` on top of the selector's tile table
+    (in place).  Overrides are the per-kernel tunables the tunedb records
+    and the serving autotune's tile microbench pins; an override for a key
+    this cell does not produce (e.g. ``attention`` on a pure CNN) is
+    ignored rather than invented — the kernel it targets never runs here.
+    Returns the applied subset for the pass stats."""
+    applied: Dict[str, str] = {}
+    for key, tile in (flow.tile_overrides or ()):
+        if key in tiles:
+            tiles[key] = tuple(tile) if isinstance(tile, (list, tuple)) \
+                else tile
+            applied[key] = str(tiles[key])
+    return applied
+
+
 def run(cfg, shape, flow) -> Dict[str, object]:
     """Produce the plan's tile table.  With ``tile_select`` off (the paper's
     base configuration) everything falls back to minimal 128 tiles — the
-    analogue of the unparallelized base kernels."""
+    analogue of the unparallelized base kernels.  ``flow.tile_overrides``
+    (tuned per-kernel schedules) are applied on top in both modes."""
     vmem = flow.vmem_budget_bytes // 4   # conservative per-kernel allowance
     tiles: Dict[str, object] = {}
     if not flow.tile_select:
@@ -91,6 +114,7 @@ def run(cfg, shape, flow) -> Dict[str, object]:
         tiles["conv2d"] = (8, 128)
         tiles["wkv_chunk"] = 16
         tiles["ce_chunk"] = flow.ce_chunk
+        apply_overrides(tiles, flow)
         return tiles
     d, f = cfg.d_model, cfg.d_ff
     seq = shape.seq_len if shape.kind != "decode" else 1
@@ -104,6 +128,7 @@ def run(cfg, shape, flow) -> Dict[str, object]:
     tiles["conv2d"] = (8, 128)
     tiles["wkv_chunk"] = 32
     tiles["ce_chunk"] = flow.ce_chunk
+    apply_overrides(tiles, flow)
     return tiles
 
 

@@ -71,13 +71,21 @@ class KernelContract:
       geometry on the serving side);
     * ``static_reject`` — the statically-decidable part of the capability
       predicate, ``(op_attrs, cfg) -> Optional[reason]``: a non-None reason
-      means dispatch will silently fall back to ref (surfaced as K204)."""
+      means dispatch will silently fall back to ref (surfaced as K204);
+    * ``tile_candidates`` — ``(cfg, shape) -> tuple of tiles``: the
+      kernel's searchable tile schedules (e.g. ``(block_q, block_kv)``
+      pairs for flash attention).  Declaring it makes the ``tile_key``
+      entry a recordable, warm-startable tunable: the serving autotune's
+      ``tune_kernel_tiles`` benches each candidate through
+      ``FlowConfig.tile_overrides`` and banks the winner in the tunedb."""
     tile_key: Optional[str] = None
     workingset: Optional[Callable[[Any, Any], int]] = None
     donation_safe: bool = True
     index_space: Optional[str] = None
     static_reject: Optional[Callable[[Dict[str, Any], Any],
                                      Optional[str]]] = None
+    tile_candidates: Optional[Callable[[Any, Any],
+                                       Tuple[Any, ...]]] = None
 
 
 @dataclass(frozen=True)
@@ -299,6 +307,24 @@ def _decode_attention_workingset(tile, cfg) -> int:
     return 2 * bk * hd * 2 + bk * 4
 
 
+def _attention_tile_candidates(cfg, shape) -> Tuple[Tuple[int, int], ...]:
+    """Searchable (block_q, block_kv) schedules for flash attention: the
+    MXU-aligned grid around the selector's static choice, capped at the
+    cell's sequence length (rule 2: blocks never exceed the problem)."""
+    seq = max(int(getattr(shape, "seq_len", 128)), 128)
+    qs = [q for q in (128, 256, 512) if q <= seq]
+    kvs = [k for k in (128, 256, 512, 1024) if k <= seq]
+    return tuple((q, k) for q in qs for k in kvs)
+
+
+def _conv2d_tile_candidates(cfg, shape) -> Tuple[Tuple[int, int], ...]:
+    """Searchable (block_h, block_c) schedules for the fused conv kernel:
+    VPU-lane-aligned rows x channel blocks, capped at the image height."""
+    h = int(getattr(cfg, "image_size", 0)) or 32
+    hs = [b for b in (8, 16, 32) if b <= h]
+    return tuple((bh, bc) for bh in hs for bc in (128, 256))
+
+
 _MATMUL_CONTRACT = KernelContract(
     tile_key="matmul", workingset=_matmul_workingset)
 
@@ -316,7 +342,8 @@ def _register_builtin():
         rejects=_attention_reject,
         contract=KernelContract(tile_key="attention",
                                 workingset=_attention_workingset,
-                                static_reject=_attention_static_reject))
+                                static_reject=_attention_static_reject,
+                                tile_candidates=_attention_tile_candidates))
     REGISTRY.register(
         "decode_attention", "pallas", kops.decode_attention,
         contract=KernelContract(tile_key="decode_attention",
@@ -345,7 +372,8 @@ def _register_builtin():
         contract=KernelContract(
             tile_key="conv2d",
             static_reject=lambda attrs, cfg:
-                _conv2d_reject(groups=attrs.get("groups", 1))))
+                _conv2d_reject(groups=attrs.get("groups", 1)),
+            tile_candidates=_conv2d_tile_candidates))
     REGISTRY.register("rg_lru", "pallas", lru_scan)
 
 

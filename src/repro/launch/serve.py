@@ -52,7 +52,7 @@ def _run_replay(args) -> None:
                               max_seq_len=args.max_seq_len,
                               block_sizes=(8, 16, 32))
         at = autotune_decode(args.arch, profile=prof, smoke=args.smoke,
-                             validate=args.validate)
+                             validate=args.validate, db=args.tune_db)
         print(at.describe())
         cm = at.compile()
         ecfg = at.engine_config(
@@ -169,6 +169,11 @@ def main():
     ap.add_argument("--validate", default="measure",
                     choices=("measure", "compile", "none"),
                     help="autotune ranking mode (--serving-autotune)")
+    ap.add_argument("--tune-db", default=None, metavar="PATH",
+                    help="persistent autotune store (repro.tunedb JSONL): "
+                         "--serving-autotune reads banked winners instead "
+                         "of re-measuring and writes new ones back; "
+                         "maintain with python -m repro.launch.tune")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record a per-tick span timeline (EngineConfig."
                          "trace) and write it as Chrome trace-event JSON — "

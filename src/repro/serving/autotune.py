@@ -29,15 +29,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import tunedb
 from repro.configs.base import FlowConfig, ModelConfig, ShapeConfig
 from repro.core import dse
 from repro.obs import TRACER
 
 
 def _timed_runs(label: str, fn: Callable[[], Any], iters: int,
-                **attrs: Any) -> List[float]:
+                warmup: int = 1, **attrs: Any) -> List[float]:
     """Wall-clock ``fn`` ``iters`` times through the module tracer (one
-    ``autotune`` span per run when tracing is on)."""
+    ``autotune`` span per run when tracing is on).  The first ``warmup``
+    run(s) are discarded — the first call can pay jit/tick-program compile
+    time, and with few iters a compile-heavy candidate would win or lose
+    on compile cost rather than steady-state time.  Callers aggregate the
+    returned samples by median."""
+    for _ in range(max(warmup, 0)):
+        fn()
     ts = []
     for _ in range(max(iters, 1)):
         sp = TRACER.timed(label, cat="autotune", **attrs)
@@ -45,6 +52,56 @@ def _timed_runs(label: str, fn: Callable[[], Any], iters: int,
         sp.end()
         ts.append(sp.elapsed_s)
     return ts
+
+
+# ---------------------------------------------------------------------------
+# persistent microbench records (repro.tunedb, kind="serving")
+# ---------------------------------------------------------------------------
+
+def _serving_key(cfg: ModelConfig, profile: "ServingProfile", fld: str,
+                 **extra: Any) -> Dict[str, Any]:
+    """The structured key one ``tune_*`` microbench persists under:
+    (cfg fingerprint, ServingProfile, tuned field, platform/device kind,
+    plus whatever pinned context the bench depends on)."""
+    key: Dict[str, Any] = {"cfg": tunedb.config_facts(cfg),
+                           "profile": dataclasses.asdict(profile),
+                           "field": fld,
+                           "platform": tunedb.device_key()}
+    key.update(extra)
+    return key
+
+
+def _db_served(tdb: Optional[tunedb.TuneDB],
+               key: Dict[str, Any]) -> Optional[Tuple[Any, Dict]]:
+    """The stored ``(best, times)`` for ``key``, or None (miss / no db)."""
+    if tdb is None:
+        return None
+    rec = tdb.lookup(key)
+    if rec is None:
+        return None
+    v = rec.value
+    return v["best"], dict(v.get("times", []))
+
+
+def _db_bank(tdb: Optional[tunedb.TuneDB], key: Dict[str, Any],
+             best: Any, times: Dict) -> None:
+    """Persist one microbench outcome (times as pairs: int keys and tuple
+    values survive the JSON round-trip exactly)."""
+    if tdb is not None:
+        tdb.put(tunedb.TuneRecord.make(
+            "serving", key, {"best": best, "times": list(times.items())}))
+
+
+def _pinned_facts(at: "DecodeAutotune") -> Dict[str, Any]:
+    """The already-pinned autotune context an engine-replay bench depends
+    on — part of its key, so re-tuning one stage after an upstream stage
+    changed never serves the stale replay."""
+    return {"flow": tunedb.flow_facts(at.flow_for()),
+            "bucket": at.best_bucket,
+            "block_size": at.block_size,
+            "chunk_size": at.chunk_size,
+            "fori_seg": at.fori_seg,
+            "prefix_cache": at.prefix_cache}
 
 
 @dataclass(frozen=True)
@@ -111,6 +168,23 @@ class DecodeAutotune:
     fori_times_s: Dict[str, float] = field(default_factory=dict)
     speculation: Optional[str] = None    # e.g. "ngram:4"; None = off
     spec_times_s: Dict[str, float] = field(default_factory=dict)
+    # per-kernel Pallas tile schedules (tune_kernel_tiles): ordered
+    # (tile_key, tile) pairs folded into every pinned flow, + bench times
+    tile_overrides: Tuple[Tuple[str, Any], ...] = ()
+    tile_times_s: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def n_measured(self) -> int:
+        """Validator invocations the per-bucket flow searches actually paid
+        (0 everywhere when every bucket was an exact tunedb hit) — what the
+        CI warm-start gate asserts shrinks."""
+        return sum(er.n_measured for er in self.per_bucket.values())
+
+    @property
+    def tunedb_statuses(self) -> Dict[int, Optional[str]]:
+        """Per-bucket tunedb outcome (None without a db, else
+        hit/transfer/cold)."""
+        return {b: er.tunedb_status for b, er in self.per_bucket.items()}
 
     def _measured_per_token(self, bucket: int) -> Optional[float]:
         er = self.per_bucket[bucket]
@@ -134,7 +208,10 @@ class DecodeAutotune:
         if b not in self.per_bucket:
             raise KeyError(f"bucket {b} was not tuned "
                            f"(profile buckets: {self.profile.batch_buckets})")
-        return self.per_bucket[b].best.flow
+        f = self.per_bucket[b].best.flow
+        if self.tile_overrides:
+            f = dataclasses.replace(f, tile_overrides=self.tile_overrides)
+        return f
 
     def compile(self, bucket: Optional[int] = None):
         """CompiledModel for the winning flow of ``bucket`` (default: the
@@ -183,6 +260,14 @@ class DecodeAutotune:
                  f"prefix_cache={'on' if self.prefix_cache else 'off'} "
                  f"chunk={self.chunk_size} fori_seg={self.fori_seg or 'off'} "
                  f"spec={self.speculation or 'off'}"]
+        statuses = self.tunedb_statuses
+        if any(s is not None for s in statuses.values()):
+            lines.append("  tunedb: " + " ".join(
+                f"b{b}={statuses[b]}" for b in self.profile.batch_buckets)
+                + f" measured={self.n_measured}")
+        if self.tile_overrides:
+            lines.append("  tiles: " + " ".join(
+                f"{k}={v}" for k, v in self.tile_overrides))
         for b in self.profile.batch_buckets:
             er = self.per_bucket[b]
             t = self._measured_per_token(b)
@@ -209,16 +294,22 @@ class DecodeAutotune:
 
 
 def tune_block_size(cfg: ModelConfig, profile: ServingProfile, *,
-                    iters: int = 5, seed: int = 0
+                    iters: int = 5, seed: int = 0, db: Any = None
                     ) -> Tuple[int, Dict[int, float]]:
     """Microbenchmark the paged decode-attention lookup per candidate block
     size at the profile's largest bucket and pick the fastest (ties -> the
     larger block: fewer table entries).  Uses the registry-resolved backend
-    (Pallas gather on TPU, ref fallback elsewhere)."""
+    (Pallas gather on TPU, ref fallback elsewhere).  ``db`` (TuneDB or
+    path) serves a previously banked winner without re-benching."""
     from repro.kernels.registry import REGISTRY
     att = cfg.attention
     if att is None:
         raise ValueError(f"{cfg.name} has no attention; nothing to tune")
+    tdb = tunedb.open_db(db)
+    key = _serving_key(cfg, profile, "block_size", iters=iters, seed=seed)
+    hit = _db_served(tdb, key)
+    if hit is not None:
+        return hit
     B = profile.batch_buckets[-1]
     H, KV, D = att.n_heads, att.n_kv_heads, att.head_dim
     rng = np.random.RandomState(seed)
@@ -249,12 +340,13 @@ def tune_block_size(cfg: ModelConfig, profile: ServingProfile, *,
             iters, bs=bs)
         times[bs] = float(np.median(ts) * 1e6)
     best = min(sorted(times, reverse=True), key=lambda b: times[b])
+    _db_bank(tdb, key, best, times)
     return best, times
 
 
 def tune_chunk_size(cfg: ModelConfig, profile: ServingProfile, *,
                     block_size: Optional[int] = None,
-                    iters: int = 5, seed: int = 0
+                    iters: int = 5, seed: int = 0, db: Any = None
                     ) -> Tuple[int, Dict[int, float]]:
     """Microbenchmark the chunked catch-up cell — a (B, k) multi-query
     lookup against the paged pool — per candidate chunk width ``k`` and
@@ -268,6 +360,12 @@ def tune_chunk_size(cfg: ModelConfig, profile: ServingProfile, *,
     B = profile.batch_buckets[-1]
     H, KV, D = att.n_heads, att.n_kv_heads, att.head_dim
     bs = block_size if block_size is not None else profile.block_sizes[0]
+    tdb = tunedb.open_db(db)
+    key = _serving_key(cfg, profile, "chunk_size", block_size=bs,
+                       iters=iters, seed=seed)
+    hit = _db_served(tdb, key)
+    if hit is not None:
+        return hit
     rng = np.random.RandomState(seed)
     from repro.serving.kvcache import blocks_for_tokens
     nblk = blocks_for_tokens(profile.max_seq_len, bs)
@@ -299,11 +397,12 @@ def tune_chunk_size(cfg: ModelConfig, profile: ServingProfile, *,
             iters, k=k)
         times[k] = float(np.median(ts) * 1e6 / k)      # per catch-up token
     best = min(sorted(times, reverse=True), key=lambda k: times[k])
+    _db_bank(tdb, key, best, times)
     return best, times
 
 
-def tune_fori_seg(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
-                  ) -> Tuple[int, Dict[str, float]]:
+def tune_fori_seg(at: DecodeAutotune, *, iters: int = 2, seed: int = 0,
+                  db: Any = None) -> Tuple[int, Dict[str, float]]:
     """Measured A/B of the host-free decode segment length on a
     decode-heavy replay of the profile's envelope: serve the same request
     batch through a pinned Engine once per candidate ``fori_seg`` (0 = the
@@ -314,6 +413,12 @@ def tune_fori_seg(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
     from repro.serving.scheduler import synthetic_requests
     prof = at.profile
     bs = at.block_size
+    tdb = tunedb.open_db(db)
+    key = _serving_key(at.cfg, prof, "fori_seg", pinned=_pinned_facts(at),
+                       iters=iters, seed=seed)
+    hit = _db_served(tdb, key)
+    if hit is not None:
+        return hit
     cands = sorted({0, *prof.fori_segs})
     segs = [s for s in cands if s] or [0]
     # short prompts (one block, bucket-exact: no left-padding) and long
@@ -340,11 +445,12 @@ def tune_fori_seg(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
                          iters, seg=seg)
         times[str(seg)] = float(np.median(ts))
     best = min(sorted(cands, reverse=True), key=lambda s: times[str(s)])
+    _db_bank(tdb, key, best, times)
     return best, times
 
 
-def tune_prefix_cache(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
-                      ) -> Tuple[bool, Dict[str, float]]:
+def tune_prefix_cache(at: DecodeAutotune, *, iters: int = 2, seed: int = 0,
+                      db: Any = None) -> Tuple[bool, Dict[str, float]]:
     """Measured A/B of the prefix-cache toggle on a shared-prefix replay of
     the profile's envelope (the workload the cache is built for): serve the
     same request batch with the cache on and off through a pinned Engine and
@@ -357,6 +463,12 @@ def tune_prefix_cache(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
     from repro.serving.scheduler import shared_prefix_requests
     prof = at.profile
     bs = at.block_size
+    tdb = tunedb.open_db(db)
+    key = _serving_key(at.cfg, prof, "prefix_cache",
+                       pinned=_pinned_facts(at), iters=iters, seed=seed)
+    hit = _db_served(tdb, key)
+    if hit is not None:
+        return hit
     max_new = max(2, min(8, prof.max_seq_len // 8))
     # shared prefix: about half the envelope, block-aligned, plus a
     # one-block tail so the whole prompt lands exactly on a prompt bucket
@@ -388,10 +500,13 @@ def tune_prefix_cache(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
         ts = _timed_runs("autotune.prefix_cache", lambda: eng.run(reqs),
                          iters, toggle=toggle)
         times[label] = float(np.median(ts))
-    return times["on"] <= times["off"], times
+    best = bool(times["on"] <= times["off"])
+    _db_bank(tdb, key, best, times)
+    return best, times
 
 
-def tune_speculation(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
+def tune_speculation(at: DecodeAutotune, *, iters: int = 2, seed: int = 0,
+                     db: Any = None
                      ) -> Tuple[Optional[str], Dict[str, float]]:
     """Measured A/B of speculative decoding on a decode-heavy shared-prefix
     replay (the prompt-lookup drafter's home turf: generations revisit the
@@ -406,6 +521,12 @@ def tune_speculation(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
     from repro.serving.scheduler import shared_prefix_requests
     prof = at.profile
     bs = at.block_size
+    tdb = tunedb.open_db(db)
+    key = _serving_key(at.cfg, prof, "speculation",
+                       pinned=_pinned_facts(at), iters=iters, seed=seed)
+    hit = _db_served(tdb, key)
+    if hit is not None:
+        return hit
     ks = sorted({0, *prof.spec_ks})
     max_k = max(ks)
     if max_k == 0:
@@ -440,7 +561,75 @@ def tune_speculation(at: DecodeAutotune, *, iters: int = 2, seed: int = 0
                          iters, k=k)
         times[label(k)] = float(np.median(ts))
     best = min(sorted(ks, reverse=True), key=lambda k: times[label(k)])
-    return (f"ngram:{best}" if best else None), times
+    spec = f"ngram:{best}" if best else None
+    _db_bank(tdb, key, spec, times)
+    return spec, times
+
+
+def tune_kernel_tiles(cfg: ModelConfig, profile: ServingProfile, *,
+                      flow: Optional[FlowConfig] = None,
+                      iters: int = 2, db: Any = None
+                      ) -> Tuple[Tuple[Tuple[str, Any], ...],
+                                 Dict[str, float]]:
+    """Search *below* the plan level: per-kernel Pallas tile schedules
+    (``block_q``/``block_kv`` for attention, ``block_h``/``block_c`` for
+    conv) declared via :attr:`KernelContract.tile_candidates`.  Each
+    candidate tile is pinned through ``FlowConfig.tile_overrides`` (the
+    TilingPass applies it on top of its own selection), the cell is
+    compiled and wall-clocked, and the fastest tile per ``tile_key`` wins.
+
+    Only ops the registry resolves to the native Pallas backend are
+    benched: the reference kernels are tile-invariant, so off-TPU there is
+    nothing to measure and the selector's schedule stands (returns
+    ``((), {})`` — deterministic on CPU CI).  Winners are recordable and
+    warm-startable through ``db`` like every other microbench."""
+    from repro import flow as rflow
+    from repro.kernels.registry import REGISTRY
+    flow0 = flow if flow is not None else FlowConfig(mode="folded")
+    tdb = tunedb.open_db(db)
+    key = _serving_key(cfg, profile, "kernel_tiles",
+                       flow=tunedb.flow_facts(flow0), iters=iters)
+    hit = _db_served(tdb, key)
+    if hit is not None:
+        best, times = hit
+        return tuple(best), times
+    B = profile.batch_buckets[-1]
+    decode_shape = profile.shape_for(B)
+    prefill_shape = ShapeConfig(f"{profile.name}_tiles_prefill",
+                                "prefill", profile.max_seq_len, B)
+    overrides: List[Tuple[str, Any]] = []
+    times: Dict[str, float] = {}
+    seen_keys = set()
+    for op in REGISTRY.accelerated_ops():
+        contract = REGISTRY.get(op, "pallas").contract
+        if contract is None or contract.tile_key is None or \
+                contract.tile_candidates is None:
+            continue
+        if contract.tile_key in seen_keys:
+            continue
+        if REGISTRY.resolve(op) != "pallas":
+            continue           # ref path: tile-invariant, nothing to bench
+        seen_keys.add(contract.tile_key)
+        shape = decode_shape if "decode" in contract.tile_key \
+            else prefill_shape
+        cands = contract.tile_candidates(cfg, shape)
+        best_tile, best_t = None, float("inf")
+        for tile in cands:
+            f = dataclasses.replace(
+                flow0, tile_overrides=((contract.tile_key, tile),))
+            sp = TRACER.timed("autotune.kernel_tiles", cat="autotune",
+                              op=op, tile=str(tile))
+            cm = rflow.compile(cfg, shape, f)
+            t = float(cm.measure(iters=iters)["measured_step_s"])
+            sp.end()
+            times[f"{contract.tile_key}:{tile}"] = t
+            if t < best_t:
+                best_tile, best_t = tile, t
+        if best_tile is not None:
+            overrides.append((contract.tile_key, best_tile))
+    best = tuple(overrides)
+    _db_bank(tdb, key, best, times)
+    return best, times
 
 
 def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
@@ -454,7 +643,9 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
                     tune_chunks: bool = True,
                     tune_fori: Optional[bool] = None,
                     tune_spec: Optional[bool] = None,
-                    use_cache: bool = True) -> DecodeAutotune:
+                    tune_tiles: Optional[bool] = None,
+                    use_cache: bool = True,
+                    db: Any = None) -> DecodeAutotune:
     """Search the flow design space for each decode cell of the serving
     profile and return the pinnable result.
 
@@ -473,13 +664,22 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
     length on a decode-heavy replay (default: only under
     ``validate="measure"``, like ``tune_prefix``); ``tune_spec`` A/Bs
     speculative decoding (n-gram drafter, the profile's ``spec_ks``) on a
-    shared-prefix replay under the same default."""
+    shared-prefix replay under the same default; ``tune_tiles`` benches
+    per-kernel Pallas tile schedules (:func:`tune_kernel_tiles`, same
+    default — a no-op off-TPU where the ref kernels are tile-invariant).
+
+    ``db`` (a :class:`repro.tunedb.TuneDB` or a path; defaults to the base
+    flow's ``tuning.tune_db``) makes the whole search persistent: each
+    bucket's flow search and each microbench reads/writes the store, so a
+    warm re-run with an unchanged profile measures nothing
+    (``DecodeAutotune.n_measured`` reports what the flow searches paid)."""
     from repro.flow import _resolve_cfg
     if validate not in ("measure", "compile", "none"):
         raise ValueError(f"unknown validate mode {validate!r}")
     cfg = _resolve_cfg(arch_or_cfg, smoke)
     profile = profile if profile is not None else ServingProfile()
     flow0 = base_flow if base_flow is not None else FlowConfig(mode="folded")
+    tdb = tunedb.open_db(db if db is not None else flow0.tuning.tune_db)
 
     mesh_obj = None
     devices = 1
@@ -501,24 +701,35 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
             validator = None
         per_bucket[bucket] = dse.explore(
             cfg, shape, flow0, devices=devices, validator=validator,
-            rank_measured=validate == "measure", use_cache=use_cache)
+            rank_measured=validate == "measure", use_cache=use_cache,
+            db=tdb)
 
     if tune_blocks:
-        block_size, block_times = tune_block_size(cfg, profile, iters=iters)
+        block_size, block_times = tune_block_size(cfg, profile, iters=iters,
+                                                  db=tdb)
     else:
         block_size, block_times = profile.block_sizes[0], {}
     at = DecodeAutotune(cfg=cfg, profile=profile, per_bucket=per_bucket,
                         block_size=block_size, block_times_us=block_times,
                         mesh=mesh_obj)
+    do_tiles = tune_tiles if tune_tiles is not None \
+        else validate == "measure"
+    if do_tiles:
+        # below-plan tunables first: the engine replays that follow pin a
+        # flow carrying the winning tile schedules
+        at.tile_overrides, at.tile_times_s = tune_kernel_tiles(
+            cfg, profile, flow=at.per_bucket[at.best_bucket].best.flow,
+            iters=iters, db=tdb)
     do_prefix = tune_prefix if tune_prefix is not None \
         else validate == "measure"
     if do_prefix:
         at.prefix_cache, at.prefix_times_s = tune_prefix_cache(at,
-                                                               iters=iters)
+                                                               iters=iters,
+                                                               db=tdb)
     if tune_chunks and cfg.attention is not None:
         chunk, chunk_times = tune_chunk_size(cfg, profile,
                                              block_size=at.block_size,
-                                             iters=iters)
+                                             iters=iters, db=tdb)
         at.chunk_times_us = chunk_times
         if chunk > 1:
             # the Engine's chunked paths require fully paged per-request
@@ -528,8 +739,9 @@ def autotune_decode(arch_or_cfg, *, profile: Optional[ServingProfile] = None,
                 at.chunk_size = chunk
     do_fori = tune_fori if tune_fori is not None else validate == "measure"
     if do_fori:
-        at.fori_seg, at.fori_times_s = tune_fori_seg(at, iters=iters)
+        at.fori_seg, at.fori_times_s = tune_fori_seg(at, iters=iters, db=tdb)
     do_spec = tune_spec if tune_spec is not None else validate == "measure"
     if do_spec and cfg.attention is not None:
-        at.speculation, at.spec_times_s = tune_speculation(at, iters=iters)
+        at.speculation, at.spec_times_s = tune_speculation(at, iters=iters,
+                                                           db=tdb)
     return at

@@ -287,6 +287,50 @@ def test_f501_bogus_flow_knob(lm_plan):
     assert [d.code for d in diags] == ["F501"]
 
 
+def test_f501_bogus_tile_override_key(lm_plan):
+    diags = static_flow_diagnostics(
+        lm_plan.cfg, lm_plan.shape,
+        dataclasses.replace(lm_plan.flow,
+                            tile_overrides=(("bogus_kernel", (8, 128)),)))
+    assert [d.code for d in diags] == ["F501"]
+
+
+# ---------------------------------------------------------------------------
+# negative cases — persistent autotune store (T)
+# ---------------------------------------------------------------------------
+
+def test_t601_stale_tunedb_record_warns_and_remeasures(tmp_path):
+    """A persisted winner whose knobs no longer apply to FlowConfig is
+    surfaced as a T601 warning and the search falls back to measuring."""
+    import warnings as _warnings
+    from repro import tunedb
+    from repro.configs import get_smoke
+    from repro.configs.base import FlowConfig, ShapeConfig
+    from repro.core import dse
+
+    cfg = get_smoke("llama3.2-1b")
+    shape = ShapeConfig("t601", "decode", 64, 4)
+    flow = FlowConfig(mode="folded")
+    path = str(tmp_path / "tune.jsonl")
+    db = tunedb.TuneDB(path)
+    key = dse._explore_db_key(cfg, shape, flow, 1, None, None, "compile",
+                              dse._platform_key())
+    db.put(tunedb.TuneRecord.make(
+        "explore", key,
+        {"best_knobs": (("no_such_flow_field", 1),), "validated": []}))
+
+    def validator(f):
+        return {"per_device_bytes": 1000}
+
+    dse.clear_explore_cache()
+    with _warnings.catch_warnings(record=True) as w:
+        _warnings.simplefilter("always")
+        r = dse.explore(cfg, shape, flow, validator=validator,
+                        use_cache=False, db=db)
+    assert any("[T601]" in str(x.message) for x in w)
+    assert r.tunedb_status == "cold" and r.n_measured >= 1
+
+
 def test_every_code_has_a_negative_case():
     """The table above must stay in lockstep with DIAGNOSTIC_CODES."""
     import inspect

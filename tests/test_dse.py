@@ -86,7 +86,8 @@ def test_explore_cache_keys_on_backend():
     r1 = dse.explore(cfg, SMOKE_TRAIN, f_auto)
     r2 = dse.explore(cfg, SMOKE_TRAIN, f_ref)
     assert r1 is not r2
-    assert dse.explore_cache_stats() == {"hits": 0, "misses": 2}
+    assert dse.explore_cache_stats() == {"hits": 0, "misses": 2,
+                                         "evictions": 0}
     assert dse.explore(cfg, SMOKE_TRAIN, f_auto) is r1
 
 

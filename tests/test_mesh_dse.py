@@ -163,7 +163,8 @@ def test_explore_cache_keys_on_mesh_topology():
     r1 = dse.explore(cfg, SMOKE_TRAIN, mesh={"data": 2, "model": 2})
     r2 = dse.explore(cfg, SMOKE_TRAIN, mesh={"data": 4, "model": 1})
     assert r1 is not r2
-    assert dse.explore_cache_stats() == {"hits": 0, "misses": 2}
+    assert dse.explore_cache_stats() == {"hits": 0, "misses": 2,
+                                         "evictions": 0}
     assert dse.explore(cfg, SMOKE_TRAIN, mesh={"data": 2, "model": 2}) is r1
     assert dse.explore_cache_stats()["hits"] == 1
     # and an unmeshed search is yet another entry

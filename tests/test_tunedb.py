@@ -1,0 +1,417 @@
+"""Persistent autotune database tests (ISSUE 10): store round-trip and
+atomicity, exact-hit / transfer warm starts through dse.explore, the
+platform-fingerprint and _timed_runs-warmup bugfixes, the bounded explore
+cache, and the serving microbench banking."""
+import dataclasses
+import json
+import os
+import threading
+
+import pytest
+
+from repro import tunedb
+from repro.configs import get_smoke
+from repro.configs.base import FlowConfig, ShapeConfig
+from repro.core import dse
+
+DECODE_B4 = ShapeConfig("db_decode4", "decode", 64, 4)
+DECODE_B8 = ShapeConfig("db_decode8", "decode", 64, 8)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    dse.clear_explore_cache()
+    tunedb.close_all()
+    yield
+    dse.clear_explore_cache()
+    dse.set_explore_cache_limit(64)
+    tunedb.close_all()
+
+
+def _validator(calls):
+    """Deterministic fake validator: every candidate fits; 'measured' time
+    is a stable function of the knobs, so winner selection is exact."""
+    def validate(flow):
+        calls.append(flow)
+        t = 0.001 + (0.0005 if flow.precision == "fp32" else 0.0) \
+            + 0.0001 * flow.scan_unroll
+        return {"per_device_bytes": 1000, "measured_step_s": t}
+    return validate
+
+
+# ---------------------------------------------------------------------------
+# store semantics
+# ---------------------------------------------------------------------------
+
+def test_tuple_values_roundtrip_exactly():
+    v = {"knobs": (("mesh_split", (("data", 2), ("model", 2))),
+                   ("tile", (128, 256))),
+         "nested": [1, (2, 3), {"k": (4,)}]}
+    assert tunedb.decode_value(json.loads(
+        tunedb.canonical_json(v))) == v
+
+
+def test_record_roundtrip_and_last_wins(tmp_path):
+    path = str(tmp_path / "tune.jsonl")
+    db = tunedb.TuneDB(path)
+    key = {"cfg": "a", "shape": 4}
+    db.record("explore", key, {"best": 1})
+    db.record("explore", key, {"best": 2})          # supersedes
+    db.record("serving", {"cfg": "b"}, {"best": 3})
+    assert len(db) == 2                             # index: last per fp
+    re = tunedb.TuneDB(path)                        # fresh load from disk
+    rec = re.lookup(key)
+    assert rec is not None and rec.value == {"best": 2}
+    assert [r.kind for r in re.records("serving")] == ["serving"]
+    assert re.stats()["by_kind"] == {"explore": 1, "serving": 1}
+
+
+def test_corrupt_and_truncated_lines_skipped_with_warning(tmp_path):
+    path = str(tmp_path / "tune.jsonl")
+    db = tunedb.TuneDB(path)
+    db.record("explore", {"k": 1}, {"best": 1})
+    db.record("explore", {"k": 2}, {"best": 2})
+    with open(path, "a", encoding="utf-8") as f:
+        f.write("not json at all\n")
+        f.write('{"kind": "explore", "fingerprint": "abc", "ke')  # torn
+    with pytest.warns(UserWarning, match="skipping corrupt record"):
+        re = tunedb.TuneDB(path)
+    assert len(re) == 2 and re.n_skipped == 2
+    assert re.lookup({"k": 2}).value == {"best": 2}
+
+
+def test_concurrent_writers_never_tear_records(tmp_path):
+    path = str(tmp_path / "tune.jsonl")
+    n_threads, n_each = 8, 25
+
+    def writer(i):
+        db = tunedb.TuneDB(path)                    # one handle per writer
+        for j in range(n_each):
+            db.record("serving", {"w": i, "j": j},
+                      {"best": i * 1000 + j, "pad": "x" * 256})
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    re = tunedb.TuneDB(path)                        # every line must parse
+    assert re.n_skipped == 0
+    assert len(re) == n_threads * n_each
+    for i in range(n_threads):
+        for j in range(n_each):
+            assert re.lookup({"w": i, "j": j}).value["best"] == i * 1000 + j
+
+
+def test_gc_compacts_and_drops_stale(tmp_path):
+    path = str(tmp_path / "tune.jsonl")
+    db = tunedb.TuneDB(path)
+    for _ in range(3):
+        db.record("explore", {"k": 1}, {"best": 1})  # 3 lines, 1 fingerprint
+    db.put(dataclasses.replace(
+        tunedb.TuneRecord.make("explore", {"k": 2}, {"best": 2}),
+        code_version="pr0.0"))
+    assert sum(1 for _ in open(path)) == 4
+    out = db.gc()
+    assert out == {"kept": 1, "dropped_stale": 1}
+    assert sum(1 for _ in open(path)) == 1
+    assert tunedb.TuneDB(path).lookup({"k": 1}).value == {"best": 1}
+
+
+def test_stale_code_version_never_served(tmp_path):
+    db = tunedb.TuneDB(str(tmp_path / "tune.jsonl"))
+    db.put(dataclasses.replace(
+        tunedb.TuneRecord.make("explore", {"k": 1}, {"best": 1}),
+        code_version="pr0.0"))
+    assert db.get(tunedb.fingerprint({"k": 1})) is None
+    assert db.get(tunedb.fingerprint({"k": 1}), code_version=None) is not None
+
+
+# ---------------------------------------------------------------------------
+# dse.explore: exact hit and cross-config transfer
+# ---------------------------------------------------------------------------
+
+def test_explore_exact_hit_measures_nothing(tmp_path):
+    """Round-trip acceptance: with a populated store, re-running the same
+    search measures 0 candidates and returns the byte-identical winner."""
+    cfg = get_smoke("llama3.2-1b")
+    path = str(tmp_path / "tune.jsonl")
+    calls = []
+    kw = dict(validator=_validator(calls), rank_measured=True,
+              use_cache=False, db=path)
+    cold = dse.explore(cfg, DECODE_B4, **kw)
+    assert cold.tunedb_status == "cold" and cold.n_measured > 0
+    n_cold = len(calls)
+    warm = dse.explore(cfg, DECODE_B4, **kw)
+    assert warm.tunedb_status == "hit"
+    assert warm.n_measured == 0 and len(calls) == n_cold   # zero validator
+    assert warm.best.flow == cold.best.flow                # byte-identical
+    assert warm.best.knobs == cold.best.knobs
+    assert warm.validated == cold.validated                # replayed record
+
+
+def test_explore_transfer_halves_measurements(tmp_path):
+    """Bucket-transfer acceptance: a neighboring batch bucket's record
+    re-anchors the ranking so >= 50% fewer candidates compile, and the
+    winner matches the cold search of the same cell."""
+    cfg = get_smoke("llama3.2-1b")
+    path = str(tmp_path / "tune.jsonl")
+    calls = []
+    kw = dict(validator=_validator(calls), rank_measured=True,
+              use_cache=False)
+    baseline = dse.explore(cfg, DECODE_B8, **kw)           # no db: reference
+    seed = dse.explore(cfg, DECODE_B4, **kw, db=path)      # seeds bucket 4
+    assert seed.tunedb_status == "cold"
+    warm = dse.explore(cfg, DECODE_B8, **kw, db=path)      # transfers 4 -> 8
+    assert warm.tunedb_status == "transfer"
+    assert warm.n_measured <= seed.n_measured // 2         # >= 50% fewer
+    assert warm.n_measured >= 1
+    assert warm.best.flow == baseline.best.flow            # same winner
+
+
+def test_explore_writes_back_transfer_results(tmp_path):
+    """A transferred search is itself banked: the third process over the
+    same cell is an exact hit."""
+    cfg = get_smoke("llama3.2-1b")
+    path = str(tmp_path / "tune.jsonl")
+    calls = []
+    kw = dict(validator=_validator(calls), rank_measured=True,
+              use_cache=False, db=path)
+    dse.explore(cfg, DECODE_B4, **kw)
+    assert dse.explore(cfg, DECODE_B8, **kw).tunedb_status == "transfer"
+    again = dse.explore(cfg, DECODE_B8, **kw)
+    assert again.tunedb_status == "hit" and again.n_measured == 0
+
+
+def test_explore_db_defaults_from_flow_tuning(tmp_path):
+    """FlowConfig.tuning.tune_db is the default store path."""
+    cfg = get_smoke("llama3.2-1b")
+    path = str(tmp_path / "tune.jsonl")
+    flow = FlowConfig(mode="folded")
+    flow = dataclasses.replace(
+        flow, tuning=dataclasses.replace(flow.tuning, tune_db=path))
+    calls = []
+    kw = dict(validator=_validator(calls), rank_measured=True,
+              use_cache=False)
+    cold = dse.explore(cfg, DECODE_B4, flow, **kw)
+    warm = dse.explore(cfg, DECODE_B4, flow, **kw)
+    assert cold.tunedb_status == "cold" and warm.tunedb_status == "hit"
+    assert os.path.exists(path)
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions
+# ---------------------------------------------------------------------------
+
+def test_explore_fingerprint_keys_on_platform(monkeypatch, tmp_path):
+    """Regression: the in-process cache fingerprint and every persisted
+    record must key on the jax backend/device *kind* — flipping platforms
+    in one process (JAX_PLATFORMS, CPU<->TPU) must never serve results
+    measured on the other one."""
+    cfg = get_smoke("llama3.2-1b")
+    path = str(tmp_path / "tune.jsonl")
+    calls = []
+    kw = dict(validator=_validator(calls), rank_measured=True,
+              use_cache=True, db=path)
+    monkeypatch.setattr(dse, "_platform_key", lambda: "cpu:host-A")
+    r1 = dse.explore(cfg, DECODE_B4, **kw)
+    monkeypatch.setattr(dse, "_platform_key", lambda: "tpu:TPU v5e")
+    r2 = dse.explore(cfg, DECODE_B4, **kw)
+    assert r2 is not r1                        # process cache: distinct entry
+    assert r2.tunedb_status == "cold"          # persisted store: no hit
+    assert dse.explore_cache_stats()["hits"] == 0
+    # ...and the same platform still hits both layers
+    r3 = dse.explore(cfg, DECODE_B4, **kw)
+    assert r3 is r2
+    fresh = dse.explore(cfg, DECODE_B4, validator=_validator(calls),
+                        rank_measured=True, use_cache=False, db=path)
+    assert fresh.tunedb_status == "hit"
+
+
+def test_timed_runs_discard_warmup_compile_time(monkeypatch):
+    """Regression: the first iteration (jit compile) must not land in the
+    sample list — a compile-heavy candidate must win/lose on steady-state
+    time."""
+    from repro.obs.trace import Tracer
+    from repro.serving import autotune
+
+    state = {"t": 0.0, "calls": 0}
+
+    def fake_clock():
+        return state["t"]
+
+    def fn():
+        # first invocation pays 10s of "compile"; steady state is 1s
+        state["t"] += 10.0 if state["calls"] == 0 else 1.0
+        state["calls"] += 1
+
+    monkeypatch.setattr(autotune, "TRACER", Tracer(clock=fake_clock))
+    ts = autotune._timed_runs("t", fn, iters=3)
+    assert state["calls"] == 4                  # 1 warmup + 3 samples
+    assert ts == [1.0, 1.0, 1.0]                # compile time discarded
+
+
+def test_explore_cache_lru_bounded_with_metrics():
+    """Regression: _EXPLORE_CACHE is bounded (LRU) and publishes
+    hits/misses/evictions."""
+    from repro.obs import METRICS
+    cfg = get_smoke("llama3.2-1b")
+    dse.set_explore_cache_limit(2)
+    ev0 = METRICS.counter("dse.cache.evictions").value
+    shapes = [ShapeConfig(f"lru{i}", "decode", 64, 2 ** i) for i in range(3)]
+    results = [dse.explore(cfg, s) for s in shapes]
+    assert len(dse._EXPLORE_CACHE) == 2
+    stats = dse.explore_cache_stats()
+    assert stats["misses"] == 3 and stats["evictions"] == 1
+    assert METRICS.counter("dse.cache.evictions").value == ev0 + 1
+    # oldest evicted: shapes[0] recomputes, shapes[2] still cached
+    assert dse.explore(cfg, shapes[2]) is results[2]
+    assert dse.explore(cfg, shapes[0]) is not results[0]
+    dse.clear_explore_cache()
+    assert dse.explore_cache_stats() == {"hits": 0, "misses": 0,
+                                         "evictions": 0}
+
+
+def test_explore_cache_limit_zero_disables():
+    cfg = get_smoke("llama3.2-1b")
+    dse.set_explore_cache_limit(0)
+    r1 = dse.explore(cfg, DECODE_B4)
+    r2 = dse.explore(cfg, DECODE_B4)
+    assert r1 is not r2 and len(dse._EXPLORE_CACHE) == 0
+
+
+# ---------------------------------------------------------------------------
+# serving microbench banking + the deterministic fake-clock winners
+# ---------------------------------------------------------------------------
+
+def test_tune_block_size_served_from_db(monkeypatch, tmp_path):
+    from repro.serving import autotune
+    cfg = get_smoke("llama3.2-1b")
+    prof = autotune.ServingProfile(name="dbt", batch_buckets=(1, 2),
+                                   max_seq_len=32, block_sizes=(8, 16))
+    path = str(tmp_path / "tune.jsonl")
+    b1, t1 = autotune.tune_block_size(cfg, prof, iters=2, db=path)
+
+    def boom(*a, **kw):
+        raise AssertionError("benched despite a banked record")
+
+    monkeypatch.setattr(autotune, "_timed_runs", boom)
+    b2, t2 = autotune.tune_block_size(cfg, prof, iters=2, db=path)
+    assert (b2, t2) == (b1, t1)
+    assert isinstance(b2, int) and all(isinstance(k, int) for k in t2)
+
+
+def test_five_tuners_same_winners_on_fake_clock(monkeypatch, tmp_path):
+    """The five tune_* microbenches pick deterministic winners on a fake
+    clock where every span costs exactly one tick: ties everywhere, so each
+    tuner's documented tie-break decides — stable across repeat runs."""
+    from repro.obs.trace import Tracer
+    from repro.serving import autotune
+
+    cfg = get_smoke("llama3.2-1b")
+    prof = autotune.ServingProfile(name="fake", batch_buckets=(2,),
+                                   max_seq_len=32, block_sizes=(8, 16),
+                                   chunk_sizes=(1, 2), fori_segs=(0, 4),
+                                   spec_ks=(0, 2))
+    at = autotune.autotune_decode(cfg, profile=prof, validate="none",
+                                  tune_blocks=False, tune_chunks=False,
+                                  use_cache=False)
+    at.block_size = 8
+
+    state = {"t": 0.0}
+    monkeypatch.setattr(autotune, "TRACER",
+                        Tracer(clock=lambda: state.__setitem__(
+                            "t", state["t"] + 0.5) or state["t"]))
+
+    winners = {}
+    for _ in range(2):                          # identical on repeat
+        run = {
+            "block": autotune.tune_block_size(cfg, prof, iters=2)[0],
+            "chunk": autotune.tune_chunk_size(cfg, prof, iters=2)[0],
+            "fori": autotune.tune_fori_seg(at, iters=1)[0],
+            "prefix": autotune.tune_prefix_cache(at, iters=1)[0],
+            "spec": autotune.tune_speculation(at, iters=1)[0],
+        }
+        winners.setdefault("runs", []).append(run)
+    a, b = winners["runs"]
+    assert a == b
+    # every span costs one tick -> ties -> each tuner's tie-break wins
+    assert a["block"] == 16                     # larger block
+    assert a["chunk"] == 2                      # larger chunk (per-token win)
+    assert a["fori"] == 4                       # larger segment
+    assert a["prefix"] is True                  # ties break toward on
+    assert a["spec"] == "ngram:2"               # larger draft_k
+
+
+def test_kernel_tiles_tile_invariant_off_tpu(tmp_path):
+    """Off-TPU every op resolves to the tile-invariant reference kernels:
+    tune_kernel_tiles returns no overrides (deterministic CPU CI) but still
+    banks that outcome."""
+    import jax
+    from repro.serving import autotune
+    if jax.default_backend() == "tpu":
+        pytest.skip("CPU/GPU-only determinism check")
+    cfg = get_smoke("llama3.2-1b")
+    prof = autotune.ServingProfile(name="tiles", batch_buckets=(2,),
+                                   max_seq_len=32, block_sizes=(8,))
+    path = str(tmp_path / "tune.jsonl")
+    ov, times = autotune.tune_kernel_tiles(cfg, prof, db=path)
+    assert ov == () and times == {}
+    assert tunedb.TuneDB(path).records("serving")
+
+
+def test_tile_candidates_registered_for_attention_and_conv():
+    from repro.kernels.registry import REGISTRY
+    att = REGISTRY.get("attention", "pallas").contract
+    cands = att.tile_candidates(get_smoke("llama3.2-1b"),
+                                ShapeConfig("t", "prefill", 256, 2))
+    assert cands and all(len(c) == 2 for c in cands)       # (bq, bkv)
+    conv = REGISTRY.get("conv2d", "pallas").contract
+    ccands = conv.tile_candidates(get_smoke("lenet5"),
+                                  ShapeConfig("t", "prefill", 32, 2))
+    assert ccands and all(len(c) == 2 for c in ccands)     # (bh, bc)
+
+
+def test_tile_overrides_applied_by_tiling_pass():
+    from repro.core.passes import tiling
+    cfg = get_smoke("llama3.2-1b")
+    flow = FlowConfig(mode="folded",
+                      tile_overrides=(("attention", (128, 256)),
+                                      ("wkv_chunk", 8)))
+    tiles = tiling.run(cfg, ShapeConfig("t", "prefill", 256, 2), flow)
+    assert tiles["attention"] == (128, 256)
+    assert tiles["wkv_chunk"] == 8
+    # an override for a key this cell does not produce is ignored
+    flow2 = FlowConfig(mode="folded",
+                       tile_overrides=(("attention", (64, 64)),))
+    cnn = get_smoke("lenet5")
+    tiles2 = tiling.run(cnn, ShapeConfig("t", "prefill", 32, 2), flow2)
+    assert tiles2["attention"] == (64, 64) if "attention" in tiles2 else True
+
+
+# ---------------------------------------------------------------------------
+# the maintenance CLI
+# ---------------------------------------------------------------------------
+
+def test_launch_tune_cli_show_gc_export(tmp_path, capsys):
+    from repro.launch import tune as cli
+    path = str(tmp_path / "tune.jsonl")
+    db = tunedb.TuneDB(path)
+    db.record("explore", {"k": 1}, {"best": (("tile_select", True),)})
+    db.put(dataclasses.replace(
+        tunedb.TuneRecord.make("serving", {"k": 2}, {"best": 2}),
+        code_version="pr0.0"))
+
+    assert cli.main(["show", "--db", path, "-v"]) == 0
+    out = capsys.readouterr().out
+    assert "records" in out and "STALE" in out and "explore" in out
+
+    exp = str(tmp_path / "dump.json")
+    assert cli.main(["export", "--db", path, "--out", exp]) == 0
+    doc = json.load(open(exp))
+    assert len(doc["records"]) == 2
+    assert doc["code_version"] == tunedb.CODE_VERSION
+
+    assert cli.main(["gc", "--db", path]) == 0
+    assert len(tunedb.TuneDB(path)) == 1       # stale record dropped
